@@ -1,0 +1,81 @@
+"""Beyond-paper: the adaptive TCP tuning daemon (paper §VI future work).
+
+Scenario: the link shifts between regimes mid-training (urban -> rural ->
+post-shutdown recovery). A static configuration is tuned for ONE regime;
+the daemon re-derives the three knobs every round from telemetry and is
+compared against (a) defaults, (b) the static tuned preset.
+"""
+
+import math
+
+from benchmarks.common import emit_csv
+from repro.transport import DEFAULT, LAB, TUNED_EDGE, client_round, effective_rtt
+from repro.tuning import AdaptiveTuner
+
+# regime schedule: (rounds, link). "ultra" (14 s OWD, RTT 28 s) exceeds even
+# the static tuned preset's handshake budget ((16+1)x1.5 = 25.5 s) — only a
+# policy that keeps adapting survives it.
+REGIMES = [
+    (5, LAB.replace(delay=0.1, loss=0.02, name="urban")),
+    (5, LAB.replace(delay=4.0, loss=0.10, name="rural_degraded")),
+    (5, LAB.replace(delay=9.0, loss=0.05, name="extreme")),
+    (5, LAB.replace(delay=14.0, loss=0.05, name="ultra")),
+    (5, LAB.replace(delay=0.3, loss=0.25, name="lossy_recovery")),
+]
+LOCAL_TRAIN = 700.0
+UPDATE = 300_000
+
+
+def simulate(policy: str):
+    """Returns (completed_rounds, total_time)."""
+    tuner = AdaptiveTuner()
+    done, t_total = 0, 0.0
+    for rounds, link in REGIMES:
+        for _ in range(rounds):
+            if policy == "default":
+                tcp = DEFAULT
+            elif policy == "static_tuned":
+                tcp = TUNED_EDGE
+            else:
+                tcp = tuner.current_params()
+            out = client_round(
+                tcp, link, update_bytes=UPDATE, local_train_time=LOCAL_TRAIN,
+                connected=False,
+            )
+            ok = out.p_complete > 0.5 and math.isfinite(out.expected_time)
+            if ok:
+                done += 1
+                t_total += out.expected_time
+            else:
+                t_total += LOCAL_TRAIN * 2  # failed-round penalty
+            if policy == "adaptive":
+                tuner.observe_round(
+                    rtt=effective_rtt(link),
+                    loss=link.loss,
+                    idle_time=LOCAL_TRAIN,
+                    silently_dropped=(LOCAL_TRAIN > link.middlebox_timeout and not ok),
+                )
+    return done, round(t_total, 1)
+
+
+def main(fast: bool = False):
+    rows = []
+    total_rounds = sum(r for r, _ in REGIMES)
+    for policy in ("default", "static_tuned", "adaptive"):
+        done, t = simulate(policy)
+        rows.append([policy, done, total_rounds, t])
+    emit_csv(
+        "adaptive_daemon: shifting regimes, completed rounds & time",
+        ["policy", "completed_rounds", "total_rounds", "total_time_s"],
+        rows,
+    )
+    by = {r[0]: r for r in rows}
+    # the daemon may drop one round per regime transition while telemetry
+    # converges, but beats any static choice once a regime falls outside
+    # that static config's envelope
+    assert by["adaptive"][1] > by["static_tuned"][1] >= by["default"][1]
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Shared benchmark harness: FL experiment runner + CSV emission.
+
+Every paper figure/table benchmark runs the SAME experiment shape the paper
+used — 10 clients, MNIST CNN, FedAvg, fixed round budget — under swept
+network conditions, and reports (accuracy, training time, completion).
+"""
+
+from __future__ import annotations
+
+import io
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.chaos import ChaosSchedule
+from repro.core import EdgeClient, FederatedServer, ServerConfig, fedavg
+from repro.data import make_federated_mnist, synthetic_mnist
+from repro.transport import DEFAULT, LAB, LinkProfile, TcpParams
+
+N_CLIENTS = 10
+ROUNDS = 8
+LOCAL_STEPS = 4
+EXAMPLES_PER_CLIENT = 200
+
+
+def run_fl_experiment(
+    *,
+    tcp: TcpParams = DEFAULT,
+    link: LinkProfile = LAB,
+    chaos: Optional[ChaosSchedule] = None,
+    min_fit: float = 0.5,
+    rounds: int = ROUNDS,
+    seed: int = 0,
+    local_steps: int = LOCAL_STEPS,
+) -> Dict[str, float]:
+    shards = make_federated_mnist(N_CLIENTS, EXAMPLES_PER_CLIENT, seed=seed)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    from repro.core import mnist_cnn_task
+
+    server = FederatedServer(
+        mnist_cnn_task(),
+        clients,
+        fedavg(min_fit=min_fit),
+        tcp=tcp,
+        chaos=chaos or ChaosSchedule(link),
+        config=ServerConfig(rounds=rounds, local_steps=local_steps, seed=seed),
+        eval_data=synthetic_mnist(400, seed=4242),
+    )
+    hist = server.run()
+    s = hist.summary()
+    return {
+        "completed_rounds": s["completed_rounds"],
+        "training_time_s": round(s["total_time_s"], 1),
+        "accuracy": round(s["final_accuracy"], 4) if s["final_accuracy"] == s["final_accuracy"] else float("nan"),
+        "trained": 1.0 if s["completed_rounds"] >= rounds * 0.5 else 0.0,
+        "mean_reconnects": round(s["mean_reconnects"], 2),
+    }
+
+
+def emit_csv(name: str, header: List[str], rows: List[List]) -> str:
+    buf = io.StringIO()
+    print(f"# {name}", file=buf)
+    print(",".join(header), file=buf)
+    for row in rows:
+        print(",".join(str(x) for x in row), file=buf)
+    out = buf.getvalue()
+    sys.stdout.write(out)
+    sys.stdout.flush()
+    return out
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

@@ -1,0 +1,41 @@
+"""Paper Fig. 4: impact of packet loss.
+
+Claims reproduced: <30% loss mild (TCP retransmits recover); 30-50%
+degraded (training time inflates steeply, small accuracy cost); >50%
+catastrophic failure (reorder-buffer exhaustion); bigger buffers (Rec #2)
+extend the envelope at a time cost.
+"""
+
+from benchmarks.common import emit_csv, run_fl_experiment
+from repro.transport import BIG_BUFFER, DEFAULT, LAB
+
+LOSSES = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.55, 0.6, 0.8]
+
+
+def main(fast: bool = False):
+    rows = []
+    losses = LOSSES[::2] if fast else LOSSES
+    for p in losses:
+        link = LAB.replace(loss=p, name=f"loss{p}")
+        r_def = run_fl_experiment(tcp=DEFAULT, link=link)
+        r_big = run_fl_experiment(tcp=BIG_BUFFER, link=link)
+        rows.append([
+            p, r_def["trained"], r_def["training_time_s"], r_def["accuracy"],
+            r_big["trained"], r_big["training_time_s"],
+        ])
+    emit_csv(
+        "fig4_loss: training vs packet loss (default vs big-buffer TCP)",
+        ["loss", "default_trains", "default_time_s", "default_acc",
+         "bigbuf_trains", "bigbuf_time_s"],
+        rows,
+    )
+    by_loss = {r[0]: r for r in rows}
+    if 0.3 in by_loss and 0.5 in by_loss and 0.0 in by_loss:
+        assert by_loss[0.3][2] > by_loss[0.0][2]  # slower under loss
+    dead = [r for r in rows if r[0] > 0.5 and r[0] <= 0.7]
+    assert all(r[1] == 0.0 for r in dead), ">50% loss must kill training"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Benchmark entry point: one benchmark per paper table/figure.
+
+``python -m benchmarks.run``          — full sweeps
+``python -m benchmarks.run --fast``   — thinned sweeps (CI)
+
+Prints each benchmark's CSV block plus a ``name,seconds,status`` summary.
+The 40-cell dry-run + roofline table is separate (compile-heavy):
+``python -m repro.launch.dryrun --all`` (see EXPERIMENTS.md).
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="thinned sweeps")
+    ap.add_argument("--only", default=None, help="run one benchmark by name")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        adaptive_daemon,
+        env_profiles,
+        fig3_latency,
+        fig4_loss,
+        fig5_client_failure,
+        fig678_tcp_params,
+        kernel_bench,
+        table3_boundaries,
+        tuned_vs_default,
+    )
+
+    benches = [
+        ("env_profiles", env_profiles.main),          # Tables I & II
+        ("fig3_latency", fig3_latency.main),          # Fig 3
+        ("fig4_loss", fig4_loss.main),                # Fig 4
+        ("fig5_client_failure", fig5_client_failure.main),  # Fig 5
+        ("fig678_tcp_params", fig678_tcp_params.main),  # Figs 6-8 + Table IV
+        ("table3_boundaries", table3_boundaries.main),  # Table III
+        ("tuned_vs_default", tuned_vs_default.main),  # SecV validation
+        ("adaptive_daemon", adaptive_daemon.main),    # beyond-paper (SecVI)
+        ("kernel_bench", kernel_bench.main),
+    ]
+
+    summary = []
+    failed = 0
+    for name, fn in benches:
+        if args.only and args.only != name:
+            continue
+        print(f"\n##### {name} #####")
+        t0 = time.time()
+        try:
+            fn(fast=args.fast)
+            status = "ok"
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            status = f"FAIL:{type(e).__name__}"
+            failed += 1
+        summary.append((name, round(time.time() - t0, 1), status))
+
+    print("\n##### summary #####")
+    print("name,seconds,status")
+    for name, dt, status in summary:
+        print(f"{name},{dt},{status}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

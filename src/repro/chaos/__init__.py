@@ -1,0 +1,17 @@
+from repro.chaos.schedule import (
+    ChaosEvent,
+    ChaosSchedule,
+    client_failure_schedule,
+    internet_shutdown,
+    netem,
+    partition,
+)
+
+__all__ = [
+    "ChaosEvent",
+    "ChaosSchedule",
+    "netem",
+    "partition",
+    "internet_shutdown",
+    "client_failure_schedule",
+]

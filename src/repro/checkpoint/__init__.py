@@ -1,0 +1,7 @@
+from repro.checkpoint.store import (
+    CheckpointManager,
+    load_tree,
+    save_tree,
+)
+
+__all__ = ["CheckpointManager", "save_tree", "load_tree"]

@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing: round-granular, atomic, elastic-resume.
+
+Layout:
+  <dir>/step_000123/
+      manifest.json      # tree structure + shapes/dtypes + metadata
+      arrays.npz         # flat leaf arrays keyed by path
+  <dir>/LATEST           # atomically updated pointer (write temp + rename)
+
+Write protocol: serialize into a temp directory, fsync, rename into place,
+then rename-update LATEST — a crash at any point leaves either the old or
+the new checkpoint fully intact (restart-safe for node failures).
+
+Elastic resume: arrays are saved *unsharded* (gathered); on load the caller
+re-shards to whatever mesh/cohort the restarted job has — pod/client counts
+may differ across restarts (see launch/train.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_tree(directory: str, tree, *, metadata: Optional[Dict] = None) -> str:
+    """Atomic checkpoint write. Returns the final directory path."""
+    os.makedirs(os.path.dirname(directory.rstrip("/")) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+
+    def _np(v):
+        a = np.asarray(v)
+        if a.dtype.kind not in "fiub":  # npz can't round-trip bf16 & friends
+            a = a.astype(np.float32)
+        elif a.dtype == np.dtype("float16") or str(a.dtype) == "bfloat16":
+            a = a.astype(np.float32)
+        return a
+
+    arrays = {k: _np(v) for k, v in flat.items()}
+    manifest = {
+        "keys": list(arrays.keys()),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "metadata": metadata or {},
+    }
+    parent = os.path.dirname(directory.rstrip("/")) or "."
+    tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=parent)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(directory):
+            shutil.rmtree(directory)
+        os.rename(tmp, directory)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return directory
+
+
+def load_tree(directory: str, template) -> Tuple[Any, Dict]:
+    """Load into the structure of ``template`` (shape-checked)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    flat_template = _flatten_with_paths(template)
+    leaves = {}
+    for key, tmpl in flat_template.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs template {tmpl.shape}")
+        if hasattr(tmpl, "dtype") and arr.dtype != tmpl.dtype:
+            # cast through jnp (handles bf16 and other ml_dtypes)
+            import jax.numpy as jnp
+
+            arr = np.asarray(jnp.asarray(arr).astype(tmpl.dtype))
+        leaves[key] = arr
+    # rebuild in template order
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    ordered = [leaves["/".join(_path_str(p) for p in path)] for path, _ in paths]
+    return jax.tree_util.tree_unflatten(jax.tree.structure(template), ordered), manifest["metadata"]
+
+
+class CheckpointManager:
+    """Round/step-granular manager with a crash-safe LATEST pointer."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:09d}")
+
+    def save(self, step: int, tree, *, metadata: Optional[Dict] = None) -> str:
+        meta = dict(metadata or {}, step=step)
+        path = save_tree(self._step_dir(step), tree, metadata=meta)
+        # atomic LATEST update
+        tmp = os.path.join(self.root, ".LATEST.tmp")
+        with open(tmp, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.root, "LATEST"))
+        self._gc()
+        return path
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.root, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def restore_latest(self, template) -> Optional[Tuple[Any, Dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return load_tree(self._step_dir(step), template)
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.root)
+            if d.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,19 @@
+from repro.compress.compressors import (
+    Compressor,
+    compressed_bytes,
+    get_compressor,
+    int8_compressor,
+    none_compressor,
+    randk_compressor,
+    topk_compressor,
+)
+
+__all__ = [
+    "Compressor",
+    "get_compressor",
+    "none_compressor",
+    "topk_compressor",
+    "randk_compressor",
+    "int8_compressor",
+    "compressed_bytes",
+]

@@ -1,0 +1,37 @@
+"""The paper's primary contribution as a system: transport-aware federated
+learning. Server round engine + strategies + edge-client model; the
+transport/chaos/tuning subpackages supply the network substrate."""
+
+from repro.core.client import EdgeClient, LocalTask, lm_task, mnist_cnn_task
+from repro.core.server import FederatedServer, History, RoundRecord, ServerConfig
+from repro.core.strategy import (
+    STRATEGIES,
+    Strategy,
+    diloco,
+    fedavg,
+    fedopt,
+    fedprox,
+    krum,
+    median,
+    trimmed_mean,
+)
+
+__all__ = [
+    "EdgeClient",
+    "LocalTask",
+    "mnist_cnn_task",
+    "lm_task",
+    "FederatedServer",
+    "ServerConfig",
+    "History",
+    "RoundRecord",
+    "Strategy",
+    "STRATEGIES",
+    "fedavg",
+    "fedprox",
+    "fedopt",
+    "diloco",
+    "trimmed_mean",
+    "median",
+    "krum",
+]

@@ -1,0 +1,164 @@
+"""Edge client model: local training payload + resource/connection state.
+
+A client owns (1) a data shard, (2) a compute profile — the paper's
+0.5 vCPU Raspberry-Pi-class allocation becomes a ``compute_rate``
+multiplier over measured step cost, (3) a transport connection state
+(connected / idle-since), and (4) a compression residual (error feedback).
+
+``LocalTask`` abstracts the payload: the paper's MNIST CNN and reduced LM
+configs implement the same interface, so every benchmark can swap payloads.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import ClientDataset
+from repro.models.cnn import cnn_apply, cnn_init, cnn_loss
+from repro.optim import apply_updates, clip_by_global_norm, sgd
+from repro.utils import tree_sub
+
+
+@dataclass
+class LocalTask:
+    """Payload: init + one local-training run on a client shard."""
+
+    name: str
+    init_fn: Callable  # key -> params
+    local_fit: Callable  # (params, client, steps, rng, prox_mu) -> (delta, n_examples, metrics)
+    evaluate: Callable  # (params, data) -> metrics
+    update_bytes: int  # uncompressed wire size of one update
+
+
+def _sgd_local_fit(loss_fn, lr: float, batch_size: int):
+    opt = sgd(lr, momentum=0.9)
+
+    @jax.jit
+    def step(params, opt_state, batch, anchor, mu):
+        def full_loss(p):
+            l, metrics = loss_fn(p, batch)
+            if mu is not None:
+                prox = sum(
+                    jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
+                    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(anchor))
+                )
+                l = l + 0.5 * mu * prox
+            return l, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(full_loss, has_aux=True)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params, jnp.int32(0))
+        return apply_updates(params, updates), opt_state, metrics
+
+    def fit(params, client: "EdgeClient", steps: int, rng: np.random.Generator, prox_mu: float):
+        anchor = params
+        opt_state = opt.init(params)
+        metrics = {}
+        n_used = 0
+        it = client.dataset.batches(batch_size, rng=rng, epochs=1000)
+        for _ in range(steps):
+            batch = next(it)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step(
+                params, opt_state, batch, anchor, prox_mu if prox_mu > 0 else None
+            )
+            n_used += batch_size
+        delta = tree_sub(params, anchor)
+        return delta, n_used, {k: float(v) for k, v in metrics.items()}
+
+    return fit
+
+
+def mnist_cnn_task(lr: float = 0.05, batch_size: int = 32) -> LocalTask:
+    """The paper's workload: MNIST CNN, ~1.6 MB params -> ~3.2 MB update
+    (float32 down+up per round ~= the paper's 3 MB/round/10-client figure)."""
+    params_t = cnn_init(jax.random.PRNGKey(0))
+    nbytes = sum(int(np.prod(p.shape)) * 4 for p in jax.tree.leaves(params_t))
+
+    @jax.jit
+    def ev(params, images, labels):
+        logits = cnn_apply(params, images)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+        return acc, nll
+
+    def evaluate(params, data: Dict[str, np.ndarray]):
+        acc, nll = ev(params, jnp.asarray(data["images"]), jnp.asarray(data["labels"]))
+        return {"accuracy": float(acc), "loss": float(nll)}
+
+    return LocalTask(
+        "mnist_cnn",
+        init_fn=cnn_init,
+        local_fit=_sgd_local_fit(cnn_loss, lr, batch_size),
+        evaluate=evaluate,
+        update_bytes=nbytes,
+    )
+
+
+def lm_task(cfg, lr: float = 1e-3, batch_size: int = 4, seq: int = 64) -> LocalTask:
+    """Reduced-LM payload: any arch config can be the FL workload."""
+    from repro.data.tokens import token_batch_for
+    from repro.models import Model
+
+    model = Model(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def fit(params, client, steps, rng, prox_mu):
+        # token shards: synthesize per-client batches (dataset carries id)
+        anchor = params
+        from repro.optim import sgd as _sgd
+
+        opt = _sgd(lr, momentum=0.9)
+        opt_state = opt.init(params)
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            grads, _ = clip_by_global_norm(grads, 1.0)
+            updates, opt_state = opt.update(grads, opt_state, params, jnp.int32(0))
+            return apply_updates(params, updates), opt_state, metrics
+
+        metrics = {}
+        for s in range(steps):
+            batch = token_batch_for(
+                cfg, batch=batch_size, seq=seq,
+                seed=int(rng.integers(0, 2**31)), client_id=client.client_id,
+            )
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step(params, opt_state, batch)
+        return tree_sub(params, anchor), steps * batch_size, {
+            k: float(v) for k, v in metrics.items()
+        }
+
+    def evaluate(params, data):
+        batch = token_batch_for(cfg, batch=batch_size, seq=seq, seed=7, client_id=10_000)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, metrics = jax.jit(loss_fn)(params, batch)
+        return {k: float(v) for k, v in metrics.items()}
+
+    params_t = model.abstract_params()
+    nbytes = sum(int(np.prod(p.shape)) * 4 for p in jax.tree.leaves(params_t))
+    return LocalTask(f"lm_{cfg.name}", model.init, fit, evaluate, nbytes)
+
+
+@dataclass
+class EdgeClient:
+    client_id: int
+    dataset: Optional[ClientDataset] = None
+    compute_rate: float = 1.0  # 1.0 = the paper's 0.5 vCPU Pi-class baseline
+    link_override: Optional[Any] = None  # LinkProfile or None (use base)
+    connected: bool = False
+    residual: Optional[Any] = None  # compression error feedback
+    rounds_participated: int = 0
+    bytes_sent: int = 0
+
+    def step_time(self, base_step_cost: float) -> float:
+        return base_step_cost / max(self.compute_rate, 1e-6)

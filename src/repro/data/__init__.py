@@ -1,0 +1,18 @@
+from repro.data.federated import (
+    ClientDataset,
+    dirichlet_partition,
+    iid_partition,
+    make_federated_mnist,
+    synthetic_mnist,
+)
+from repro.data.tokens import synthetic_token_batches, token_batch_for
+
+__all__ = [
+    "ClientDataset",
+    "iid_partition",
+    "dirichlet_partition",
+    "synthetic_mnist",
+    "make_federated_mnist",
+    "synthetic_token_batches",
+    "token_batch_for",
+]

@@ -1,0 +1,106 @@
+"""Federated data pipeline: synthetic MNIST + IID/non-IID partitioning.
+
+The paper trains MNIST over 10 Flower clients. Offline here, so we generate
+a *structured* synthetic MNIST: class-conditional digit prototypes (coarse
+7x7 strokes upsampled) + noise. It is learnable (a CNN reaches >90 % in a
+few hundred steps) and classes are genuinely distinct, which makes the
+non-IID Dirichlet partition meaningful — exactly what the paper's client
+heterogeneity discussion needs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class ClientDataset:
+    client_id: int
+    images: np.ndarray  # [N, 28, 28, 1] float32
+    labels: np.ndarray  # [N] int32
+
+    def num_examples(self) -> int:
+        return int(self.labels.shape[0])
+
+    def batches(self, batch_size: int, *, rng: np.random.Generator, epochs: int = 1):
+        n = self.num_examples()
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n - batch_size + 1, batch_size):
+                idx = order[i : i + batch_size]
+                yield {"images": self.images[idx], "labels": self.labels[idx]}
+
+
+_PROTO_CACHE: Dict[int, np.ndarray] = {}
+
+
+def _prototypes(seed: int = 1234) -> np.ndarray:
+    """10 class prototypes: random coarse 7x7 masks upsampled to 28x28."""
+    if seed in _PROTO_CACHE:
+        return _PROTO_CACHE[seed]
+    rng = np.random.default_rng(seed)
+    coarse = (rng.random((10, 7, 7)) > 0.55).astype(np.float32)
+    protos = coarse.repeat(4, axis=1).repeat(4, axis=2)  # [10,28,28]
+    _PROTO_CACHE[seed] = protos
+    return protos
+
+
+def synthetic_mnist(n: int, *, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    protos = _prototypes()
+    scale = rng.uniform(0.35, 0.75, (n, 1, 1)).astype(np.float32)  # intensity variation
+    images = protos[labels] * scale + rng.normal(0, 0.45, (n, 28, 28)).astype(np.float32)
+    images = np.clip(images, 0.0, 1.0)[..., None].astype(np.float32)
+    return {"images": images, "labels": labels}
+
+
+def iid_partition(data: Dict[str, np.ndarray], n_clients: int, *, seed: int = 0) -> List[ClientDataset]:
+    n = data["labels"].shape[0]
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    shards = np.array_split(order, n_clients)
+    return [
+        ClientDataset(c, data["images"][idx], data["labels"][idx])
+        for c, idx in enumerate(shards)
+    ]
+
+
+def dirichlet_partition(
+    data: Dict[str, np.ndarray], n_clients: int, *, alpha: float = 0.5, seed: int = 0
+) -> List[ClientDataset]:
+    """Non-IID label-skew partition (Li et al., ICDE'22 — paper ref [15])."""
+    rng = np.random.default_rng(seed)
+    labels = data["labels"]
+    idx_by_class = [np.where(labels == k)[0] for k in range(10)]
+    client_indices: List[List[int]] = [[] for _ in range(n_clients)]
+    for k_idx in idx_by_class:
+        rng.shuffle(k_idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(k_idx)).astype(int)[:-1]
+        for c, part in enumerate(np.split(k_idx, cuts)):
+            client_indices[c].extend(part.tolist())
+    out = []
+    for c, idx in enumerate(client_indices):
+        idx = np.array(sorted(idx), dtype=np.int64)
+        if len(idx) == 0:  # guarantee non-empty shards
+            idx = np.array([rng.integers(0, len(labels))])
+        out.append(ClientDataset(c, data["images"][idx], data["labels"][idx]))
+    return out
+
+
+def make_federated_mnist(
+    n_clients: int = 10,
+    examples_per_client: int = 600,
+    *,
+    iid: bool = True,
+    alpha: float = 0.5,
+    seed: int = 0,
+) -> List[ClientDataset]:
+    data = synthetic_mnist(n_clients * examples_per_client, seed=seed)
+    if iid:
+        return iid_partition(data, n_clients, seed=seed)
+    return dirichlet_partition(data, n_clients, alpha=alpha, seed=seed)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots (validated in interpret
+mode on CPU; see tests/test_kernels.py for the per-kernel shape/dtype
+sweeps against the ref.py oracles).
+
+- flash_attention: blockwise online-softmax attention (causal/SWA/GQA)
+- fedavg_reduce:   fused weighted reduction over stacked client deltas
+- swiglu:          fused SwiGLU FFN (hidden never hits HBM)
+- quantize:        int8 stochastic-rounding quantization (compression)
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

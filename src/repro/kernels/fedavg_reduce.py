@@ -1,0 +1,48 @@
+"""Pallas kernel: fused weighted FedAvg reduction.
+
+The server-side aggregation hot spot: out = sum_c w[c] * X[c, :] over C
+stacked client deltas. Done naively (tree_weighted_mean) XLA materializes
+per-client scaled copies; the kernel streams X through VMEM tile by tile
+and keeps a single f32 accumulator — one pass, no intermediates.
+
+Grid: (n_tiles,) over the flattened parameter axis; weights stay resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(w_ref, x_ref, o_ref, *, n_clients: int):
+    # w_ref [C, 1] f32; x_ref [C, T]; o_ref [1, T]
+    x = x_ref[...].astype(jnp.float32)  # [C, T]
+    w = w_ref[...].astype(jnp.float32)  # [C, 1]
+    o_ref[...] = jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)  # [1, T]
+
+
+def fedavg_reduce_flat(x, w, *, tile: int = 2048, interpret: bool = False):
+    """x [C, N], w [C] (already normalized) -> [N] weighted sum."""
+    C, N = x.shape
+    pad = (-N) % tile
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    Np = x.shape[1]
+    kernel = functools.partial(_reduce_kernel, n_clients=C)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Np // tile,),
+        in_specs=[
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+            pl.BlockSpec((C, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.float32),
+        interpret=interpret,
+    )(w.reshape(C, 1).astype(jnp.float32), x)
+    return out[0, :N]

@@ -1,0 +1,143 @@
+"""Pallas TPU flash attention (causal / sliding-window / GQA).
+
+TPU-native adaptation of blockwise online-softmax attention: the kernel is
+tiled for VMEM with MXU-aligned (multiple-of-128) q/kv tiles, the grid is
+(batch*q_heads, q_blocks, kv_blocks) with kv innermost so the m/l/acc
+running statistics live in VMEM scratch across kv steps, and causal /
+window skipping is done with pl.when on whole blocks (no wasted MXU work
+on fully-masked tiles — this is the structural lower-triangle saving the
+pure-XLA path can't express).
+
+Layout contract (see ops.py): q [BH, Sq, D], k/v [BKV, Skv, D] with
+BH = batch * q_heads, BKV = batch * kv_heads; the GQA mapping
+bh -> bh // group is folded into the kv BlockSpec index maps.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [1, bq, D]
+    k_ref,  # [1, bkv, D]
+    v_ref,  # [1, bkv, D]
+    o_ref,  # [1, bq, D]
+    m_ref,  # scratch [bq, 1] f32
+    l_ref,  # scratch [bq, 1] f32
+    acc_ref,  # scratch [bq, D] f32
+    *,
+    block_q: int,
+    block_kv: int,
+    causal: bool,
+    window: int,
+    scale: float,
+    seq_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # block-level relevance: skip fully-masked tiles entirely
+    needed = True
+    if causal:
+        needed = jnp.logical_and(True, k_start <= q_start + block_q - 1)
+    if window and window > 0:
+        needed = jnp.logical_and(needed, k_start + block_kv - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0].astype(jnp.float32)  # [bkv, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bkv]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window and window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [bq, bkv]
+        corr = jnp.exp(m_prev - m_new)  # [bq, 1]
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *, causal=True, window=0, scale=None,
+    block_q=128, block_kv=128, interpret=False,
+):
+    """q [BH, Sq, D]; k/v [BKV, Skv, D]; BH = G * BKV (grouped heads).
+
+    Returns [BH, Sq, D]. Sq/Skv must be multiples of the block sizes.
+    """
+    BH, Sq, D = q.shape
+    BKV, Skv, Dv = k.shape
+    assert BH % BKV == 0, (BH, BKV)
+    G = BH // BKV
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    nq, nk = Sq // block_q, Skv // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_kv=block_kv,
+        causal=causal,
+        window=window,
+        scale=scale,
+        seq_kv=Skv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+            pl.BlockSpec((1, block_kv, Dv), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

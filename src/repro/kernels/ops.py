@@ -1,0 +1,106 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses: they handle
+layout (BSHD <-> BH,S,D reshapes for GQA), padding to tile multiples, and
+the interpret-mode switch (CPU validation vs TPU target).
+
+The paper has no kernel-level contribution (DESIGN §7); these kernels are
+the perf-critical substrate of the learning layer: attention dominates
+train_4k/prefill_32k compute, swiglu dominates dense-FFN memory traffic,
+fedavg_reduce is the server aggregation hot spot, quantize feeds the
+constrained-link compressors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg_reduce import fedavg_reduce_flat
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.quantize import dequantize_flat, quantize_stochastic_flat
+from repro.kernels.swiglu import swiglu_fused
+from repro.utils import flatten_to_vector, unflatten_from_vector
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q, k, v, *, causal=True, window=0, block_q=128, block_kv=128, interpret=False
+):
+    """q [B, Sq, Hq, D]; k/v [B, Skv, Hkv, D] -> [B, Sq, Hq, Dv].
+
+    GQA handled by head-major flattening: [B,S,H,D] -> [B*H, S, D] with kv
+    heads broadcast through the kernel's index maps (no materialized repeat).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, Dv)
+    out = flash_attention_bhsd(
+        qf, kf, vf, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return out.reshape(B, Hq, Sq, Dv).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def fedavg_reduce(stacked_deltas, weights, *, tile=2048, interpret=False):
+    """Weighted mean over stacked client deltas.
+
+    stacked_deltas: pytree whose leaves have leading client dim C.
+    weights: [C]; normalized internally (FedAvg semantics).
+    """
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-20)
+
+    def one(leaf):
+        C = leaf.shape[0]
+        flat = leaf.reshape(C, -1)
+        out = fedavg_reduce_flat(flat, w, tile=tile, interpret=interpret)
+        return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree.map(one, stacked_deltas)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def quantize_tree(tree, key, *, tile=4096, interpret=False):
+    """Per-tensor int8 stochastic quantization of a pytree.
+
+    Returns (payload {q, scale, meta}, dequantize closure input).
+    """
+    vec, meta = flatten_to_vector(tree)
+    scale = jnp.maximum(jnp.max(jnp.abs(vec)), 1e-12) / 127.0
+    uniform = jax.random.uniform(key, vec.shape, jnp.float32)
+    q = quantize_stochastic_flat(vec, uniform, scale, tile=tile, interpret=interpret)
+    return {"q": q, "scale": scale}
+
+
+def dequantize_tree(payload, template):
+    vec, meta = flatten_to_vector(template)
+    deq = dequantize_flat(payload["q"], payload["scale"])
+    return unflatten_from_vector(deq, meta)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f", "interpret"))
+def swiglu(x, w_gate, w_up, w_down, *, block_m=256, block_f=512, interpret=False):
+    """Fused SwiGLU over [..., d] inputs."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    M = 1
+    for s in lead:
+        M *= s
+    x2 = x.reshape(M, d)
+    bm = block_m
+    while M % bm and bm > 1:
+        bm //= 2
+    bf = block_f
+    F = w_gate.shape[1]
+    while F % bf and bf > 1:
+        bf //= 2
+    out = swiglu_fused(x2, w_gate, w_up, w_down, block_m=bm, block_f=bf, interpret=interpret)
+    return out.reshape(*lead, d)

@@ -1,0 +1,52 @@
+"""Pallas kernel: int8 quantization with stochastic rounding.
+
+Compression front-end for the constrained link (repro.compress): quantize
+q = clip(round_sr(x/scale)) where round_sr(y) = floor(y + u), u ~ U[0,1)
+supplied as precomputed uniform bits (keeps the kernel deterministic and
+oracle-checkable; on real TPU the bits would come from pltpu.prng_*).
+
+Grid tiles the flattened tensor; scale is per-tensor, computed by the
+caller (ops.py) — the kernel is pure elementwise + cast, VMEM-tiled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, u_ref, s_ref, q_ref):
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    scale = s_ref[0, 0]
+    y = x / scale
+    q = jnp.floor(y + u)  # stochastic rounding
+    q_ref[...] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def quantize_stochastic_flat(x, uniform, scale, *, tile: int = 4096, interpret: bool = False):
+    """x [N] f32, uniform [N] in [0,1), scale scalar -> int8 [N]."""
+    (N,) = x.shape
+    pad = (-N) % tile
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        uniform = jnp.pad(uniform, (0, pad))
+    Np = x.shape[0]
+    q = pl.pallas_call(
+        _quant_kernel,
+        grid=(Np // tile,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.int8),
+        interpret=interpret,
+    )(x.reshape(1, Np), uniform.reshape(1, Np), jnp.reshape(scale, (1, 1)))
+    return q[0, :N]
+
+
+def dequantize_flat(q, scale):
+    return q.astype(jnp.float32) * scale

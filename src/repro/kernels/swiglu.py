@@ -1,0 +1,59 @@
+"""Pallas kernel: fused SwiGLU FFN block.
+
+out = (silu(x @ Wg) * (x @ Wu)) @ Wd computed tile-by-tile over the hidden
+dimension with a VMEM f32 accumulator — the h = silu(..)*(..) intermediate
+([M, d_ff], the largest activation in every dense block) never exists in
+HBM. Grid: (m_tiles, f_tiles) with f innermost accumulating into scratch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):
+    fi = pl.program_id(1)
+    nf = pl.num_programs(1)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # [bm, d]
+    g = jax.lax.dot(x, wg_ref[...], preferred_element_type=jnp.float32)  # [bm, bf]
+    u = jax.lax.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u
+    acc_ref[...] += jax.lax.dot(
+        h.astype(x.dtype), wd_ref[...], preferred_element_type=jnp.float32
+    )  # [bm, d]
+
+    @pl.when(fi == nf - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def swiglu_fused(x, w_gate, w_up, w_down, *, block_m: int = 256, block_f: int = 512,
+                 interpret: bool = False):
+    """x [M, d], w_gate/w_up [d, F], w_down [F, d] -> [M, d]."""
+    M, d = x.shape
+    F = w_gate.shape[1]
+    block_m = min(block_m, M)
+    block_f = min(block_f, F)
+    assert M % block_m == 0 and F % block_f == 0, (M, F, block_m, block_f)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(M // block_m, F // block_f),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda mi, fi: (mi, 0)),
+            pl.BlockSpec((d, block_f), lambda mi, fi: (0, fi)),
+            pl.BlockSpec((d, block_f), lambda mi, fi: (0, fi)),
+            pl.BlockSpec((block_f, d), lambda mi, fi: (fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda mi, fi: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

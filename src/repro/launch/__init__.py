@@ -1,0 +1,11 @@
+"""Distribution layer: mesh construction, sharded step builders, the
+multi-pod dry-run, roofline derivation, and train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+fresh process (python -m repro.launch.dryrun). Everything else here is
+import-safe.
+"""
+
+from repro.launch.mesh import TPU_V5E, make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh", "TPU_V5E"]

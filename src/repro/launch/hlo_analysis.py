@@ -1,0 +1,429 @@
+"""While-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (verified in
+this environment: a 10-step scan of matmuls reports 1/10th the FLOPs of the
+unrolled equivalent). Since this framework scans everywhere (layer stacks,
+attention tiles, vocab-loss chunks, SSM time steps), naive cost_analysis
+under-reports by 1-2 orders of magnitude.
+
+This module parses the post-optimization HLO text, reconstructs the
+computation call graph (while bodies/conds, fusions, calls), extracts
+while trip counts from their condition computations (counted-loop pattern:
+``compare(iter, constant), direction=LT``), and computes:
+
+- flops:   dot + convolution ops, multiplied through loop trip counts
+           (elementwise flops are ignored — documented; they are bandwidth-
+           not compute-bound and <1% of any of these workloads),
+- bytes:   operand+result bytes of top-level ops per *executed* computation
+           (fusion internals excluded — fusions touch HBM only at their
+           boundary), multiplied through loop trip counts,
+- collective_bytes: payload (operand) bytes of all-gather / all-reduce /
+           reduce-scatter / all-to-all / collective-permute, by type, with
+           loop multipliers.
+
+Validated against cost_analysis() on unrolled modules in
+tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# one HLO type: a tuple (possibly with nested parens in TPU layouts) or a
+# single shape with optional layout braces
+_TYPE = r"(?:\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)"
+_OP_RE = re.compile(
+    rf"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*({_TYPE})\s+([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op] = field(default_factory=list)
+    defs: Dict[str, str] = field(default_factory=dict)  # op name -> result type
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_counts: int = 0
+    bytes_by_opcode: Dict[str, float] = field(default_factory=dict)
+    flops_by_metadata: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), bool(m.group(1)))
+                # register parameters from the header
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))", m.group(3)):
+                    cur.defs[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, rtype, opcode, operand_str, attrs = m.groups()
+            operands = [
+                o.strip().lstrip("%")
+                for o in _split_top_level(operand_str)
+                if o.strip()
+            ]
+            # operands may be "f32[2,3] %name" — keep the last token
+            operands = [o.split()[-1].lstrip("%") if o else o for o in operands]
+            op = Op(name, opcode, rtype.strip(), operands, attrs, line)
+            cur.ops.append(op)
+            cur.defs[name] = rtype.strip()
+    return comps
+
+
+def _split_top_level(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _operand_type(comp: Computation, operand: str) -> Optional[str]:
+    return comp.defs.get(operand)
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_dims = _shape_dims(op.result_type)
+    if out_dims is None:
+        return 0.0
+    lhs_type = _operand_type(comp, op.operands[0]) if op.operands else None
+    lhs_dims = _shape_dims(lhs_type) if lhs_type else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs + op.line)
+    contracted = 1
+    if lhs_dims is not None and m and m.group(1):
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                contracted *= lhs_dims[ci]
+    elif lhs_dims:
+        contracted = lhs_dims[-1]  # default: last dim contracts
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * contracted
+
+
+def _conv_flops(comp: Computation, op: Op) -> float:
+    out_dims = _shape_dims(op.result_type)
+    rhs_type = _operand_type(comp, op.operands[1]) if len(op.operands) > 1 else None
+    rhs_dims = _shape_dims(rhs_type) if rhs_type else None
+    if out_dims is None or rhs_dims is None:
+        return 0.0
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    rhs_n = 1
+    for d in rhs_dims:
+        rhs_n *= d
+    # per output element: 2 * (kernel spatial x in_features); rhs includes
+    # out_features once — divide it out. dim order varies; use the dim
+    # labelled by the output feature count when possible, else last dim.
+    m = re.search(r"dim_labels=[\w\?]*_[\w\?]*o?", op.line)
+    co = out_dims[-1] if out_dims else 1
+    for d in rhs_dims:
+        if d == co:
+            rhs_n //= max(d, 1)
+            break
+    else:
+        rhs_n //= max(rhs_dims[-1], 1)
+    return 2.0 * out_n * rhs_n
+
+
+_TRIP_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _while_trip_count(comps: Dict[str, Computation], cond_name: str) -> Optional[int]:
+    """Counted-loop bound from the condition computation.
+
+    Scan lowers to ``compare(iter, constant(N)), direction=LT`` — but XLA
+    often wraps the compare in a kLoop fusion, leaving the bound constant in
+    the cond computation itself. Heuristic: collect every integer constant
+    in the cond computation (and computations it calls); counted loops carry
+    exactly one bound (other constants are 0/1 strides); take the max.
+    """
+    cond = comps.get(cond_name)
+    if cond is None:
+        return None
+    consts: List[int] = []
+
+    def scan_comp(c: Computation, depth: int = 0):
+        if depth > 2:
+            return
+        for op in c.ops:
+            if op.opcode == "constant":
+                m = _TRIP_CONST_RE.search(op.line)
+                if m:
+                    consts.append(int(m.group(1)))
+            m = _TRIP_CONST_RE.search(op.line) if op.opcode == "compare" else None
+            if m:
+                consts.append(int(m.group(1)))
+            cm = re.search(r"calls=%?([\w\.\-]+)", op.line)
+            if cm and cm.group(1) in comps:
+                scan_comp(comps[cm.group(1)], depth + 1)
+
+    scan_comp(cond)
+    positive = [c for c in consts if c >= 1]
+    return max(positive) if positive else None
+
+
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)%?([\w\.\-]+)"
+)
+
+_SLICING_OPS = ("dynamic-slice", "gather", "slice")
+
+
+def _fusion_boundary_bytes(comps: Dict[str, Computation], parent: Computation, op: Op) -> float:
+    """HBM traffic of a fusion op: result + per-parameter read sizes.
+
+    A fusion parameter consumed ONLY by slicing ops reads just the slices
+    (the stacked-layer-params-inside-scan case); otherwise the full operand.
+    DUS-output fusions write the update region, approximated by the largest
+    non-parameter internal result.
+    """
+    m = re.search(r"calls=%?([\w\.\-]+)", op.line)
+    called = comps.get(m.group(1)) if m else None
+    if called is None:
+        total = _shape_bytes(op.result_type)
+        for operand in op.operands:
+            t = parent.defs.get(operand)
+            if t:
+                total += _shape_bytes(t)
+        return total
+
+    # in-place DUS-rooted fusion: write the update region, not the buffer
+    root = called.ops[-1] if called.ops else None
+    inplace_param = None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd_t = called.defs.get(root.operands[1]) if len(root.operands) > 1 else None
+        total = 2.0 * _shape_bytes(upd_t) if upd_t else _shape_bytes(op.result_type)
+        inplace_param = root.operands[0]
+    else:
+        total = _shape_bytes(op.result_type)
+
+    # map parameter index -> ops consuming it inside the fusion
+    param_names = {}
+    for iop in called.ops:
+        if iop.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", iop.line)
+            if pm:
+                param_names[iop.name] = int(pm.group(1))
+    consumers: Dict[str, List[Op]] = {p: [] for p in param_names}
+    for iop in called.ops:
+        if iop.opcode == "parameter":
+            continue
+        for operand in iop.operands:
+            if operand in consumers:
+                consumers[operand].append(iop)
+
+    for pname, idx in param_names.items():
+        if pname == inplace_param:
+            continue  # in-place buffer: not re-read
+        cons = consumers.get(pname, [])
+        if cons and all(c.opcode in _SLICING_OPS for c in cons):
+            total += sum(_shape_bytes(c.result_type) for c in cons)
+        else:
+            if idx < len(op.operands):
+                t = parent.defs.get(op.operands[idx])
+                if t:
+                    total += _shape_bytes(t)
+    return total
+
+
+def analyze_hlo(hlo_text: str, *, breakdown: bool = False) -> HloCost:
+    comps = parse_computations(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloCost()
+
+    memo_flops: Dict[Tuple[str, bool], Tuple[float, float, Dict[str, float], int]] = {}
+    byte_acc: Dict[str, float] = {}
+    flop_acc: Dict[str, float] = {}
+
+    def _tag(op):
+        m = re.search(r'op_name="([^"]+)"', op.line)
+        return (m.group(1).split("/")[-1] if m else op.opcode)[:60]
+
+    def visit(name: str, count_bytes: bool, mult: float = 1.0):
+        """Returns (flops, bytes, collective_bytes_by_type, unknown_trips)."""
+        key = (name, count_bytes)
+        if key in memo_flops and not breakdown:
+            return memo_flops[key]
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0, 0.0, {}, 0
+        memo_flops[key] = (0.0, 0.0, {}, 0)  # cycle guard
+        flops = 0.0
+        nbytes = 0.0
+        coll: Dict[str, float] = {}
+        unknown = 0
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                f_ = _dot_flops(comp, op)
+                flops += f_
+                if breakdown:
+                    flop_acc[_tag(op)] = flop_acc.get(_tag(op), 0.0) + f_ * mult
+            elif oc == "convolution":
+                f_ = _conv_flops(comp, op)
+                flops += f_
+                if breakdown:
+                    flop_acc[_tag(op)] = flop_acc.get(_tag(op), 0.0) + f_ * mult
+
+            if count_bytes and oc not in (
+                "parameter", "get-tuple-element", "tuple", "constant", "bitcast",
+                "after-all", "partition-id", "replica-id",
+            ):
+                if oc == "dynamic-update-slice":
+                    # in-place: traffic is the updated slice (read+write), not
+                    # the whole buffer — counting the buffer would overcount
+                    # scans by their trip count
+                    upd = comp.defs.get(op.operands[1]) if len(op.operands) > 1 else None
+                    b_ = 2.0 * _shape_bytes(upd) if upd else _shape_bytes(op.result_type)
+                elif oc == "dynamic-slice":
+                    b_ = 2.0 * _shape_bytes(op.result_type)
+                elif oc == "fusion":
+                    b_ = _fusion_boundary_bytes(comps, comp, op)
+                else:
+                    b_ = _shape_bytes(op.result_type)
+                    for operand in op.operands:
+                        t = comp.defs.get(operand)
+                        if t:
+                            b_ += _shape_bytes(t)
+                nbytes += b_
+                if breakdown:
+                    byte_acc[oc] = byte_acc.get(oc, 0.0) + b_ * mult
+
+            base = None
+            for c in COLLECTIVES:
+                if oc == c or oc == c + "-start":
+                    base = c
+                    break
+            if base is not None:
+                payload = 0.0
+                for operand in op.operands:
+                    t = comp.defs.get(operand)
+                    if t:
+                        payload += _shape_bytes(t)
+                if payload == 0.0:  # fall back to result size
+                    payload = _shape_bytes(op.result_type)
+                coll[base] = coll.get(base, 0.0) + payload
+
+            if oc == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", op.line)
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                trip = _while_trip_count(comps, cond.group(1)) if cond else None
+                if trip is None:
+                    trip = 1
+                    unknown += 1
+                if body:
+                    f, b, cl, u = visit(body.group(1), count_bytes, mult * trip)
+                    flops += trip * f
+                    nbytes += trip * b
+                    for k, v in cl.items():
+                        coll[k] = coll.get(k, 0.0) + trip * v
+                    unknown += u
+            elif oc in ("fusion",):
+                m = re.search(r"calls=%?([\w\.\-]+)", op.line)
+                if m:
+                    f, b, cl, u = visit(m.group(1), False, mult)  # fusion: no HBM bytes inside
+                    flops += f
+                    for k, v in cl.items():
+                        coll[k] = coll.get(k, 0.0) + v
+                    unknown += u
+            elif oc in ("call", "conditional", "custom-call", "async-start"):
+                for m in _CALLED_RE.finditer(op.line):
+                    sub = m.group(1)
+                    if sub in comps and sub != name:
+                        f, b, cl, u = visit(sub, count_bytes and oc != "custom-call", mult)
+                        flops += f
+                        nbytes += b
+                        for k, v in cl.items():
+                            coll[k] = coll.get(k, 0.0) + v
+                        unknown += u
+        memo_flops[key] = (flops, nbytes, coll, unknown)
+        return memo_flops[key]
+
+    flops, nbytes, coll, unknown = visit(entry.name, True)
+    return HloCost(flops=flops, bytes=nbytes, collective_bytes=coll,
+                   unknown_trip_counts=unknown,
+                   bytes_by_opcode=byte_acc, flops_by_metadata=flop_acc)

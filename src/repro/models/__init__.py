@@ -1,0 +1,3 @@
+from repro.models.api import Model, VLM_PATCH_TOKENS
+
+__all__ = ["Model", "VLM_PATCH_TOKENS"]

@@ -1,0 +1,198 @@
+"""Uniform model API over all families.
+
+``Model(cfg)`` exposes:
+  init(key) / abstract_params() / param_axes()
+  loss(params, batch) -> (loss, metrics)              [train shapes]
+  prefill(params, batch, max_len) -> (logits, cache)  [prefill shapes]
+  decode_step(params, cache, tokens) -> (logits, cache) [decode shapes]
+  init_cache(batch, max_len) / cache_spec(...)        [concrete/abstract]
+  input_specs(shape) -> dict of ShapeDtypeStructs     [dry-run stand-ins]
+  cache_axes(...)                                     [logical sharding axes]
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import lm as lm_mod
+from repro.models.base import Ctx
+
+VLM_PATCH_TOKENS = 256  # vision-stub prefix length
+
+
+def _family(cfg: ModelConfig) -> str:
+    if cfg.enc_dec:
+        return "encdec"
+    if cfg.hybrid is not None:
+        return "hybrid"
+    return "lm"
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.family = _family(cfg)
+
+    # ---- params ----
+    def _params(self, ctx: Ctx):
+        if self.family == "encdec":
+            return encdec_mod.encdec_params(ctx, self.cfg)
+        if self.family == "hybrid":
+            return hybrid_mod.hybrid_params(ctx, self.cfg)
+        return lm_mod.lm_params(ctx, self.cfg)
+
+    def init(self, key):
+        return self._params(Ctx("init", key, jnp.dtype(self.cfg.param_dtype)))
+
+    def abstract_params(self):
+        return self._params(Ctx("abstract", param_dtype=jnp.dtype(self.cfg.param_dtype)))
+
+    def param_axes(self):
+        return self._params(Ctx("axes"))
+
+    # ---- forward paths ----
+    def loss(self, params, batch):
+        cfg = self.cfg
+        if self.family == "encdec":
+            h, _, _ = encdec_mod.encdec_loss_forward(cfg, params, batch)
+            # reuse the chunked-vocab loss from lm on the decoder hidden states
+            return lm_mod.loss_from_hidden(cfg, params, h, batch)
+        if self.family == "hybrid":
+            h, _, _ = hybrid_mod.hybrid_forward(cfg, params, batch)
+            return lm_mod.loss_from_hidden(cfg, params, h, batch)
+        return lm_mod.lm_loss(cfg, params, batch)
+
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        if self.family == "encdec":
+            return encdec_mod.encdec_prefill(cfg, params, batch, max_len)
+        if self.family == "hybrid":
+            caches = hybrid_mod.hybrid_cache(cfg, batch["tokens"].shape[0], max_len)
+            h, new_caches, _ = hybrid_mod.hybrid_forward(cfg, params, batch, caches=caches)
+            S = batch["tokens"].shape[1]
+            ac = dict(new_caches["attn"])
+            ac["pos"] = jnp.full_like(ac["pos"], S)
+            new_caches = dict(new_caches)
+            new_caches["attn"] = ac
+            logits = lm_mod.unembed(cfg, params, h[:, -1:])[:, 0]
+            return logits, new_caches
+        return lm_mod.lm_prefill(cfg, params, batch, max_len)
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        if self.family == "encdec":
+            return encdec_mod.encdec_decode_step(cfg, params, cache, tokens)
+        if self.family == "hybrid":
+            h, new_caches, _ = hybrid_mod.hybrid_forward(
+                cfg, params, {"tokens": tokens}, caches=cache, decode=True
+            )
+            logits = lm_mod.unembed(cfg, params, h)[:, 0]
+            return logits, new_caches
+        return lm_mod.lm_decode_step(cfg, params, cache, tokens)
+
+    # ---- caches ----
+    def init_cache(self, batch: int, max_len: int):
+        return self._cache(batch, max_len, abstract=False)
+
+    def cache_spec(self, batch: int, max_len: int):
+        return self._cache(batch, max_len, abstract=True)
+
+    def _cache(self, batch: int, max_len: int, abstract: bool):
+        cfg = self.cfg
+        if self.family == "encdec":
+            return encdec_mod.encdec_cache(cfg, batch, max_len, abstract)
+        if self.family == "hybrid":
+            return hybrid_mod.hybrid_cache(cfg, batch, max_len, abstract)
+        return lm_mod.lm_cache(cfg, batch, max_len, abstract)
+
+    # ---- dry-run input stand-ins ----
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f = jnp.dtype(cfg.dtype)
+
+        def tok(n):
+            return jax.ShapeDtypeStruct((B, n), i32)
+
+        if shape.kind == "train":
+            if cfg.frontend == "vision_stub":
+                st = S - VLM_PATCH_TOKENS
+                return {
+                    "tokens": tok(st),
+                    "patch_embed": jax.ShapeDtypeStruct((B, VLM_PATCH_TOKENS, cfg.d_model), f),
+                    "targets": tok(st),
+                    "loss_mask": jax.ShapeDtypeStruct((B, st), jnp.float32),
+                }
+            if cfg.enc_dec:
+                return {
+                    "frames": jax.ShapeDtypeStruct((B, cfg.enc_seq_len, cfg.d_model), f),
+                    "tokens": tok(S),
+                    "targets": tok(S),
+                    "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+                }
+            return {
+                "tokens": tok(S),
+                "targets": tok(S),
+                "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+            }
+        if shape.kind == "prefill":
+            out = {"tokens": tok(S if cfg.frontend != "vision_stub" else S - VLM_PATCH_TOKENS)}
+            if cfg.frontend == "vision_stub":
+                out["patch_embed"] = jax.ShapeDtypeStruct((B, VLM_PATCH_TOKENS, cfg.d_model), f)
+            if cfg.enc_dec:
+                out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq_len, cfg.d_model), f)
+            return out
+        # decode: one token against a cache of seq_len
+        return {"tokens": tok(1)}
+
+    # ---- logical axes for cache sharding ----
+    def cache_axes(self, batch: int, max_len: int):
+        spec = self.cache_spec(batch, max_len)
+        return jax.tree.map(lambda l: _axes_for_cache_leaf(l), spec)
+
+
+_CACHE_AXES_BY_RANK: Dict[Tuple[str, int], Tuple[Optional[str], ...]] = {}
+
+
+def _axes_for_cache_leaf(leaf) -> Tuple[Optional[str], ...]:
+    """Assign logical axes to cache leaves by rank/shape heuristics.
+
+    Leaves (stacked on a leading layer dim):
+      k/v            [L, B, Skv, Hkv, hd] -> (layers, batch, kvseq, kv_heads, head_dim)
+      c_kv/k_pe      [L, B, Skv, r]       -> (layers, batch, kvseq, lora)
+      pos            [L, B]               -> (layers, batch)
+      kv_pos         [L, B, Skv]          -> (layers, batch, kvseq)
+      rwkv S         [L, B, H, hd, hd]    -> (layers, batch, heads, head_dim, head_dim2)
+      tm_x/cm_x      [L, B, 1, d]         -> (layers, batch, null, embed)
+      mamba ssm      [Ls, e, B, H, N, hd] -> (layers, layers2, batch, heads, state, head_dim)
+      mamba conv     [Ls, e, B, K-1, C]   -> (layers, layers2, batch, null, ffn)
+      cross_k/v      [L, B, Se, Hkv, hd]  -> (layers, batch, encseq, kv_heads, head_dim)
+    Rank-based assignment is sufficient because every rank is unambiguous
+    within one cache tree.
+    """
+    shape = leaf.shape
+    r = len(shape)
+    if r == 2:
+        return ("layers", "batch")
+    if r == 3:
+        return ("layers", "batch", "kvseq")
+    if r == 4:
+        if shape[2] == 1:
+            return ("layers", "batch", None, "embed")
+        # [L,B,Skv,r] (MLA) vs mamba conv [Ls,e? ...] — MLA path only
+        return ("layers", "batch", "kvseq", "lora")
+    if r == 5:
+        if shape[3] == shape[4]:
+            return ("layers", "batch", "heads", "head_dim", "head_dim2")
+        return ("layers", "batch", "kvseq", "kv_heads", "head_dim")
+    if r == 6:
+        return ("layers", "layers2", "batch", "heads", "state", "head_dim")
+    return tuple([None] * r)

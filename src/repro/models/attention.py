@@ -1,0 +1,474 @@
+"""Attention variants: GQA (+qk_norm, sliding window), MLA (DeepSeek-V2).
+
+Three compute paths:
+
+- ``blockwise_attention`` — memory-bounded online-softmax attention in pure
+  jnp (lax.scan over query/kv tiles). This is the XLA path used for
+  lowering/dry-run; the Pallas flash kernel (repro.kernels.flash_attention)
+  mirrors its semantics for the TPU target.
+- ``full_attention`` — materialized scores, for short sequences and as the
+  reference oracle in tests.
+- ``decode_attention`` — single-token query against a (possibly ring) cache.
+
+Caches are dicts of stacked-by-layer arrays; layer stacks scan over them.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Ctx, apply_rope, heads_constraint, linear, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _pad_heads_for_tp(cfg, q, k, v):
+    """Zero-pad q (and kv) heads up to a model-axis multiple so attention
+    stays head-sharded on non-divisible configs (phi3-medium 40H, starcoder2
+    24H, whisper 8H on a 16-way axis). Padded-q outputs are sliced away by
+    the caller; real q heads keep mapping to real kv heads because
+    H_pad/Hkv_pad preserves the group order. Cost: extra attention FLOPs
+    proportional to the padding (recorded in DESIGN/EXPERIMENTS)."""
+    nm = cfg.act_shard_model
+    H, Hkv = q.shape[2], k.shape[2]
+    if not nm or H % nm == 0:
+        return q, k, v, H
+    H_pad = ((H + nm - 1) // nm) * nm
+    Hkv_pad = next(h for h in range(Hkv, H_pad + 1) if H_pad % h == 0)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, H_pad - H), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Hkv_pad - Hkv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Hkv_pad - Hkv), (0, 0)))
+    return qp, kp, vp, H
+
+
+def repeat_kv(k, n_heads: int):
+    """[B,S,Hkv,D] -> [B,S,H,D]. A slice-of-broadcast under GSPMD when the
+    head dim is model-sharded — keeps attention head-parallel without the
+    grouped-reshape that breaks SPMD propagation."""
+    Hkv = k.shape[2]
+    if Hkv == n_heads:
+        return k
+    G = n_heads // Hkv
+    return jnp.repeat(k, G, axis=2)
+
+
+def full_attention(q, k, v, *, causal=True, window=0, q_offset=0, scale=None, kv_len=None):
+    """Materialized attention. q [B,Sq,H,D], k/v [B,Skv,Hkv,Dk/Dv] (GQA kv
+    repeated internally). Supports causal masking with ``q_offset`` (query i
+    sits at absolute position q_offset+i), sliding windows, a kv length mask.
+    """
+    B, Sq, Hq, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    k = repeat_kv(k, Hq)
+    v = repeat_kv(v, Hq)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale  # [B,H,Sq,Skv]
+
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window and window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def blockwise_attention(
+    q,
+    k,
+    v,
+    *,
+    causal=True,
+    window=0,
+    q_offset=0,
+    scale=None,
+    block_q=512,
+    block_kv=1024,
+):
+    """Online-softmax tiled attention (flash semantics, pure jnp).
+
+    Scans query tiles in an outer lax.scan and kv tiles in an inner one,
+    carrying (running_max, running_sum, accumulator). Peak memory is one
+    [B, H, block_q, block_kv] score tile. Heads stay a plain (shardable)
+    dimension: GQA kv are repeated before the scan (slice-of-broadcast
+    under head-sharded SPMD, not a materialized copy per shard).
+
+    KV tiles are sliced with dynamic_slice inside the scan (rather than
+    pre-reshaped scan xs) so the sequence dimension's sharding is not
+    re-partitioned per step.
+    """
+    B, Sq, Hq, D = q.shape
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    k = repeat_kv(k, Hq)
+    v = repeat_kv(v, Hq)
+    Skv = k.shape[1]
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0, (
+        f"seq {Sq}/{Skv} not divisible by blocks {block_q}/{block_kv}"
+    )
+    nq, nk = Sq // block_q, Skv // block_kv
+
+    def q_step(_, qi):
+        qblk = jax.lax.dynamic_slice_in_dim(q, qi * block_q, block_q, axis=1)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, ki * block_kv, block_kv, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, ki * block_kv, block_kv, axis=1)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale  # [B,H,bq,bkv]
+            qpos = q_offset + qi * block_q + jnp.arange(block_q)
+            kpos = ki * block_kv + jnp.arange(block_kv)
+            mask = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window and window > 0:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hq, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hq, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hq, block_q, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,H,bq,Dv]
+        # emit output tiles in the value dtype: the stacked [nq,...] buffer
+        # in f32 doubles prefill memory for no accuracy benefit
+        return None, out.swapaxes(1, 2).astype(v.dtype)  # [B,bq,H,Dv]
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs [nq, B, bq, H, Dv]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, Dv)
+    return out.astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, window=0, scale=None, kv_positions=None):
+    """One-token attention against a cache.
+
+    q [B,1,Hq,D]; k_cache/v_cache [B,Smax,Hkv,D*]; pos [B] int32 current
+    lengths (query absolute position = pos). ``kv_positions`` [B,Smax]
+    carries absolute positions for ring buffers; when None, slot index is
+    the absolute position. GQA via repeat (slice-of-broadcast when the cache
+    is head- or sequence-sharded — no grouped reshape that would break SPMD).
+    """
+    B, _, Hq, D = q.shape
+    Smax = k_cache.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    k = repeat_kv(k_cache, Hq)
+    v = repeat_kv(v_cache, Hq)
+
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale  # [B,Hq,1,Smax]
+
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Smax)[None], (B, Smax))
+    valid = kv_positions <= pos[:, None]
+    valid &= kv_positions >= 0
+    if window and window > 0:
+        valid &= pos[:, None] - kv_positions < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA block (params + forward for train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def gqa_params(ctx: Ctx, cfg, stacked: Optional[int] = None):
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+    p = {
+        "wq": ctx.param(lead + (d, H, hd), la + ("embed", "heads", "head_dim")),
+        "wk": ctx.param(lead + (d, Hkv, hd), la + ("embed", "kv_heads", "head_dim")),
+        "wv": ctx.param(lead + (d, Hkv, hd), la + ("embed", "kv_heads", "head_dim")),
+        "wo": ctx.param(lead + (H, hd, d), la + ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ctx.param(lead + (hd,), la + ("head_dim",), init="ones")
+        p["k_norm"] = ctx.param(lead + (hd,), la + ("head_dim",), init="ones")
+    return p
+
+
+def _project_qkv(cfg, p, x, positions):
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # (heads_constraint is applied by the caller after head padding)
+    return q, k, v
+
+
+def gqa_forward(cfg, p, x, *, positions=None, cache=None, decode=False, cross_kv=None, causal=None):
+    """Returns (out [B,S,d], new_cache_or_None).
+
+    - train/prefill: cache is None or an empty cache dict to fill.
+    - decode: x is [B,1,d]; cache holds k/v [B,Smax,Hkv,D] (+positions for
+      ring buffers) and is updated functionally.
+    - cross_kv: precomputed (k, v) for encoder-decoder cross attention.
+    """
+    B, S, d = x.shape
+    causal = cfg.causal if causal is None else causal
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k, v = cross_kv
+        out = full_attention(q, k, v, causal=False)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), None
+
+    if not decode:
+        q, k, v = _project_qkv(cfg, p, x, positions)
+        new_cache = None
+        if cache is not None:
+            Smax = cache["k"].shape[1]
+            new_cache = dict(cache)
+            if Smax >= S:
+                kw, vw = k, v
+                pw = jnp.broadcast_to(positions.astype(jnp.int32), (B, S))
+            else:  # ring cache smaller than prompt: keep the last Smax tokens
+                kw, vw = k[:, -Smax:], v[:, -Smax:]
+                pw = jnp.broadcast_to(positions.astype(jnp.int32), (B, S))[:, -Smax:]
+            new_cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], kw.astype(cache["k"].dtype), (0, 0, 0, 0)
+            )
+            new_cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], vw.astype(cache["v"].dtype), (0, 0, 0, 0)
+            )
+            if "kv_pos" in cache:
+                new_cache["kv_pos"] = jax.lax.dynamic_update_slice(
+                    cache["kv_pos"], pw, (0, 0)
+                )
+        qp, kp, vp, H_real = _pad_heads_for_tp(cfg, q, k, v)
+        qp, kp, vp = (heads_constraint(cfg, t) for t in (qp, kp, vp))
+        if S > max(cfg.attn_block_q, cfg.attn_block_kv) and S % cfg.attn_block_q == 0 and S % cfg.attn_block_kv == 0:
+            out = blockwise_attention(
+                qp, kp, vp, causal=causal, window=cfg.sliding_window,
+                block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            )
+        else:
+            out = full_attention(qp, kp, vp, causal=causal, window=cfg.sliding_window)
+        out = heads_constraint(cfg, out)[:, :, :H_real]
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+    # ---- decode ----
+    pos = cache["pos"]  # [B] int32 absolute position of this query token
+    q, k, v = _project_qkv(cfg, p, x, positions=pos[:, None])
+    Smax = cache["k"].shape[1]
+    ring = bool(cfg.sliding_window) and Smax <= cfg.sliding_window
+    slot = (pos % Smax) if ring else jnp.minimum(pos, Smax - 1)  # [B]
+
+    def write(buf, val):
+        # buf [B,Smax,H,D], val [B,1,H,D] — scatter one slot per batch row.
+        idx = slot[:, None]  # [B,1]
+        return jax.vmap(
+            lambda b, v_, i: jax.lax.dynamic_update_slice(b, v_, (i[0], 0, 0))
+        )(buf, val.astype(buf.dtype), idx)
+
+    new_cache = dict(cache)
+    new_cache["k"] = write(cache["k"], k)
+    new_cache["v"] = write(cache["v"], v)
+    kv_pos = cache.get("kv_pos")
+    if kv_pos is not None:
+        kv_pos = jax.vmap(
+            lambda r, i, pv: jax.lax.dynamic_update_slice(r, pv[None], (i,))
+        )(kv_pos, slot, pos.astype(jnp.int32))
+        new_cache["kv_pos"] = kv_pos
+    out = decode_attention(
+        q, new_cache["k"], new_cache["v"], pos=pos,
+        window=cfg.sliding_window, kv_positions=kv_pos,
+    )
+    new_cache["pos"] = pos + 1
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def gqa_cache_spec(cfg, batch: int, max_len: int, stacked: int):
+    """ShapeDtype spec for the stacked-by-layer GQA cache."""
+    hd = cfg.resolved_head_dim
+    Smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = jnp.dtype(cfg.dtype)
+    spec = {
+        "k": jax.ShapeDtypeStruct((stacked, batch, Smax, cfg.n_kv_heads, hd), dt),
+        "v": jax.ShapeDtypeStruct((stacked, batch, Smax, cfg.n_kv_heads, hd), dt),
+        "pos": jax.ShapeDtypeStruct((stacked, batch), jnp.int32),
+    }
+    if cfg.sliding_window and Smax <= cfg.sliding_window:
+        spec["kv_pos"] = jax.ShapeDtypeStruct((stacked, batch, Smax), jnp.int32)
+    return spec
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, stacked: int):
+    spec = gqa_cache_spec(cfg, batch, max_len, stacked)
+    out = {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+    if "kv_pos" in out:
+        out["kv_pos"] = out["kv_pos"] - 1  # -1 = empty slot
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2) — naive train path + absorbed decode path
+# ---------------------------------------------------------------------------
+
+
+def mla_params(ctx: Ctx, cfg, stacked: Optional[int] = None):
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_dq": ctx.param(lead + (d, m.q_lora_rank), la + ("embed", "lora")),
+        "q_norm": ctx.param(lead + (m.q_lora_rank,), la + ("lora",), init="ones"),
+        "w_uq": ctx.param(lead + (m.q_lora_rank, H, qk), la + ("lora", "heads", "qk_dim")),
+        "w_dkv": ctx.param(
+            lead + (d, m.kv_lora_rank + m.qk_rope_dim), la + ("embed", "lora")
+        ),
+        "kv_norm": ctx.param(lead + (m.kv_lora_rank,), la + ("lora",), init="ones"),
+        "w_uk": ctx.param(
+            lead + (m.kv_lora_rank, H, m.qk_nope_dim), la + ("lora", "heads", "qk_dim")
+        ),
+        "w_uv": ctx.param(
+            lead + (m.kv_lora_rank, H, m.v_head_dim), la + ("lora", "heads", "head_dim")
+        ),
+        "wo": ctx.param(lead + (H, m.v_head_dim, d), la + ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_forward(cfg, p, x, *, positions=None, cache=None, decode=False):
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+
+    cq = rms_norm(linear(x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["w_uq"].astype(x.dtype))
+    q_nope, q_pe = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+
+    kv_a = linear(x, p["w_dkv"])  # [B,S,kv_lora+rope]
+    c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_pe = kv_a[..., m.kv_lora_rank :][:, :, None, :]  # [B,S,1,rope] shared
+
+    if not decode:
+        q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+        k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uv"].astype(x.dtype))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe, (B, S, H, m.qk_rope_dim))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        q_full = heads_constraint(cfg, q_full)
+        k_full = heads_constraint(cfg, k_full)
+        v = heads_constraint(cfg, v)
+        if S > max(cfg.attn_block_q, cfg.attn_block_kv) and S % cfg.attn_block_q == 0:
+            out = blockwise_attention(
+                q_full, k_full, v, causal=True, scale=scale,
+                block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            )
+        else:
+            out = full_attention(q_full, k_full, v, causal=True, scale=scale)
+        out = heads_constraint(cfg, out)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["c_kv"] = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)
+            )
+            new_cache["k_pe"] = jax.lax.dynamic_update_slice(
+                cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), (0, 0, 0)
+            )
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+    # ---- absorbed decode: cache holds c_kv [B,Smax,lora] + k_pe [B,Smax,rope]
+    pos = cache["pos"]  # [B]
+    q_pe = apply_rope(q_pe, pos[:, None], cfg.rope_theta)
+    k_pe = apply_rope(k_pe, pos[:, None], cfg.rope_theta)
+
+    def write2(buf, val):
+        # buf [B,Smax,r]; val [B,1,r]; one slot per batch row at pos[b].
+        return jax.vmap(
+            lambda b, v_, i: jax.lax.dynamic_update_slice(b, v_, (i, 0))
+        )(buf, val.astype(buf.dtype), pos)
+
+    new_cache = dict(cache)
+    new_cache["c_kv"] = write2(cache["c_kv"], c_kv)
+    new_cache["k_pe"] = write2(cache["k_pe"], k_pe[:, :, 0])
+
+    # absorb W_uk into q: q_abs [B,1,H,lora]
+    q_abs = jnp.einsum("bshk,lhk->bshl", q_nope, p["w_uk"].astype(x.dtype))
+    s_nope = jnp.einsum(
+        "bshl,bkl->bhsk", q_abs, new_cache["c_kv"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    s_pe = jnp.einsum(
+        "bshr,bkr->bhsk", q_pe, new_cache["k_pe"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    s = (s_nope + s_pe) * scale  # [B,H,1,Smax]
+    Smax = cache["c_kv"].shape[1]
+    valid = jnp.arange(Smax)[None] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx_l = jnp.einsum("bhsk,bkl->bshl", prob.astype(x.dtype), new_cache["c_kv"].astype(x.dtype))
+    out = jnp.einsum("bshl,lhk->bshk", ctx_l, p["w_uv"].astype(x.dtype))
+    new_cache["pos"] = pos + 1
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+def mla_cache_spec(cfg, batch: int, max_len: int, stacked: int):
+    m = cfg.mla
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "c_kv": jax.ShapeDtypeStruct((stacked, batch, max_len, m.kv_lora_rank), dt),
+        "k_pe": jax.ShapeDtypeStruct((stacked, batch, max_len, m.qk_rope_dim), dt),
+        "pos": jax.ShapeDtypeStruct((stacked, batch), jnp.int32),
+    }
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, stacked: int):
+    return {
+        k: jnp.zeros(v.shape, v.dtype)
+        for k, v in mla_cache_spec(cfg, batch, max_len, stacked).items()
+    }

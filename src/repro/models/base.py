@@ -1,0 +1,199 @@
+"""Parameter construction context + elementary ops shared by all families.
+
+Models are pure functions ``apply(cfg, params, ...)`` over nested-dict
+parameter trees. The tree *structure* is defined exactly once, in the init
+code, via a :class:`Ctx` that materializes each parameter in one of three
+modes:
+
+- ``init``     — real arrays (jit-able, deterministic fold_in RNG),
+- ``abstract`` — ``jax.ShapeDtypeStruct`` leaves (dry-run: no allocation),
+- ``axes``     — logical-axis tuples (consumed by ``repro.sharding``).
+
+Logical axis names used across the zoo:
+  batch, seq, kvseq, embed, vocab, heads, kv_heads, head_dim, qk_dim,
+  ffn, experts, layers, state, conv, lora
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+class Ctx:
+    """Parameter materialization context (one structure, three modes)."""
+
+    def __init__(self, mode: str, key: Optional[jax.Array] = None, param_dtype=jnp.bfloat16):
+        assert mode in ("init", "abstract", "axes")
+        self.mode = mode
+        self.key = key
+        self.param_dtype = param_dtype
+        self._counter = 0
+
+    def _next_key(self):
+        k = jax.random.fold_in(self.key, self._counter)
+        self._counter += 1
+        return k
+
+    def param(
+        self,
+        shape: Sequence[int],
+        axes: Axes,
+        init: str = "fan_in",
+        scale: Optional[float] = None,
+        dtype=None,
+    ):
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(axes), f"shape {shape} vs axes {axes}"
+        dtype = dtype or self.param_dtype
+        if self.mode == "axes":
+            return axes
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        k = self._next_key()
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            s = 0.02 if scale is None else scale
+            return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+        if init == "fan_in":
+            # fan_in = product of all dims except the last (stacked-layer dim
+            # excluded by convention when axes[0] == "layers").
+            dims = shape[1:] if axes and axes[0] == "layers" else shape
+            fan_in = int(np.prod(dims[:-1])) if len(dims) > 1 else dims[0]
+            s = (scale if scale is not None else 1.0) / max(np.sqrt(fan_in), 1.0)
+            return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+        if init == "uniform":
+            s = 1.0 if scale is None else scale
+            return (jax.random.uniform(k, shape, jnp.float32, -s, s)).astype(dtype)
+        raise ValueError(f"unknown init {init}")
+
+
+# ---------------------------------------------------------------------------
+# Elementary ops (pure jnp; compute in float32, return activation dtype)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg, x, w):
+    if cfg.norm_kind == "layernorm":
+        return layer_norm(x, w["scale"], w["bias"], cfg.norm_eps)
+    return rms_norm(x, w["scale"], cfg.norm_eps)
+
+
+def norm_params(ctx: Ctx, cfg, d: int, stacked: Optional[int] = None):
+    lead = () if stacked is None else (stacked,)
+    lead_ax = () if stacked is None else ("layers",)
+    p = {"scale": ctx.param(lead + (d,), lead_ax + ("embed",), init="ones")}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = ctx.param(lead + (d,), lead_ax + ("embed",), init="zeros")
+    return p
+
+
+def linear(x, w):
+    """x @ w with f32 accumulation via preferred_element_type."""
+    return jax.lax.dot_general(
+        x,
+        w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def heads_constraint(cfg, t):
+    """Constraint for [B, S, H, D] attention tensors: batch->data,
+    heads->model (when divisible; else head_dim->model as contracting-dim
+    TP fallback — phi3-medium's 40 heads), S replicated — the Megatron-SP
+    layout inside the attention block (paired with seq_constraint outside).
+    """
+    if not (cfg.act_shard_data and cfg.act_shard_model) or t.ndim != 4:
+        return t
+    B, S, H, D = t.shape
+    from jax.sharding import PartitionSpec as P
+
+    b_ax = "data" if B % cfg.act_shard_data == 0 else None
+    # no head_dim fallback: q heads are padded to divisibility upstream and
+    # kv heads replicate cleanly (repeat_kv re-shards); a head_dim constraint
+    # here conflicts with the einsum layouts and trips XLA resharding bugs
+    h_ax = "model" if H % cfg.act_shard_model == 0 else None
+    if b_ax is None and h_ax is None:
+        return t
+    return jax.lax.with_sharding_constraint(t, P(b_ax, None, h_ax, None))
+
+
+def seq_constraint(cfg, x):
+    """Sequence-parallel sharding constraint on residual-stream activations.
+
+    x [B, S, d] -> constrained to (data, model, None) when cfg enables act
+    sharding and the dims divide evenly. No-op otherwise (smoke tests, CPU).
+    """
+    if not (cfg.act_shard_data and cfg.act_shard_model) or x.ndim != 3:
+        return x
+    B, S, _ = x.shape
+    from jax.sharding import PartitionSpec as P
+
+    b_ax = "data" if B % cfg.act_shard_data == 0 else None
+    s_ax = "model" if S % cfg.act_shard_model == 0 else None
+    if b_ax is None and s_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(b_ax, s_ax, None))
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = np.arange(n)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d)
+    table = np.zeros((n, d), np.float32)
+    table[:, 0::2] = np.sin(pos * div)
+    table[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(table)

@@ -1,0 +1,65 @@
+"""The paper's own FL workload: a small MNIST CNN (~1.6 MB of parameters,
+matching the ~3 MB-per-round update traffic quoted in §II of the paper for
+10 clients).
+
+Architecture: 2x(conv3x3 + relu + maxpool) -> dense 128 -> dense 10.
+Pure JAX (lax.conv_general_dilated); used by the FL core, the examples, and
+every paper-figure benchmark.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def cnn_init(key, num_classes: int = 10) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1": {"w": he(k1, (3, 3, 1, 16), 9), "b": jnp.zeros((16,))},
+        "conv2": {"w": he(k2, (3, 3, 16, 32), 144), "b": jnp.zeros((32,))},
+        "fc1": {"w": he(k3, (32 * 7 * 7, 128), 32 * 49), "b": jnp.zeros((128,))},
+        "fc2": {"w": he(k4, (128, num_classes), 128), "b": jnp.zeros((num_classes,))},
+    }
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_apply(params, images):
+    """images [B, 28, 28, 1] -> logits [B, 10]."""
+    x = jax.nn.relu(_conv(images, params["conv1"]["w"], params["conv1"]["b"]))
+    x = _maxpool(x)
+    x = jax.nn.relu(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(params, batch):
+    """batch: {'images': [B,28,28,1], 'labels': [B]} -> (loss, metrics)."""
+    logits = cnn_apply(params, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}

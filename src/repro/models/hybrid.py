@@ -1,0 +1,240 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+Layout: ``n_layers`` Mamba2 blocks; after every ``hybrid.attn_every``-th
+Mamba2 block, one shared transformer block (attention + MLP, parameters
+shared across all applications — the Zamba2 trick) is applied.
+
+Scanned as super-blocks: ``n_super = n_layers // attn_every`` scanned units
+of (attn_every stacked mamba layers + one shared-attn application), plus an
+unscanned tail of ``n_layers % attn_every`` mamba layers. The shared block's
+params live outside the scan (closure constants), so they are genuinely
+shared — one param set, n_super applications.
+
+For ``long_500k`` the shared attention runs with a sliding window
+(cfg.sliding_window), keeping the hybrid sub-quadratic end to end.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.base import Ctx, apply_norm, norm_params, seq_constraint
+from repro.models.lm import _remat, unembed
+
+
+def _layout(cfg: ModelConfig):
+    every = cfg.hybrid.attn_every
+    n_super = cfg.n_layers // every
+    tail = cfg.n_layers % every
+    return every, n_super, tail
+
+
+def hybrid_params(ctx: Ctx, cfg: ModelConfig):
+    every, n_super, tail = _layout(cfg)
+    V, d = cfg.padded_vocab, cfg.d_model
+
+    def mamba_stack(count):
+        return {
+            "ln": norm_params(ctx, cfg, d, stacked=count),
+            "body": ssm_mod.mamba2_params(ctx, cfg, stacked=count),
+        }
+
+    p: Dict[str, Any] = {
+        "embed": ctx.param((V, d), ("vocab", "embed"), init="normal", scale=0.02),
+        "final_norm": norm_params(ctx, cfg, d),
+        "unembed": ctx.param((d, V), ("embed", "vocab")),
+        # stacked [n_super*every, ...]; reshaped to [n_super, every, ...] in forward
+        "mamba": mamba_stack(n_super * every),
+        "shared_attn": {
+            "ln1": norm_params(ctx, cfg, d),
+            "attn": attn.gqa_params(ctx, cfg),
+            "ln2": norm_params(ctx, cfg, d),
+            "mlp": mlp_mod.mlp_params(ctx, cfg),
+        },
+    }
+    if tail:
+        p["tail"] = mamba_stack(tail)
+    return p
+
+
+def _mamba_block(cfg, p, x, state):
+    """One mamba layer with pre-norm residual. state: (ssm, conv) or None."""
+    h = apply_norm(cfg, x, p["ln"])
+    if state is None:
+        y, _ = ssm_mod.mamba2_forward(cfg, p["body"], h)
+        return x + y, None
+    ssm_state, conv_state = state["ssm"], state["conv"]
+    if h.shape[1] == 1:
+        y, (ssm_state, conv_state) = ssm_mod.mamba2_decode(
+            cfg, p["body"], h, ssm_state, conv_state
+        )
+    else:
+        y, (ssm_state, conv_state) = ssm_mod.mamba2_forward(
+            cfg, p["body"], h, state=ssm_state, conv_state=conv_state
+        )
+    return x + y, {"ssm": ssm_state, "conv": conv_state}
+
+
+def _shared_attn_block(cfg, p, x, cache, *, decode, positions):
+    h = apply_norm(cfg, x, p["ln1"])
+    y, new_cache = attn.gqa_forward(
+        cfg, p["attn"], h, positions=positions, cache=cache, decode=decode
+    )
+    x = x + y
+    h = apply_norm(cfg, x, p["ln2"])
+    x = x + mlp_mod.mlp_forward(cfg, p["mlp"], h)
+    return x, new_cache
+
+
+def hybrid_forward(cfg, params, batch, *, caches=None, decode=False):
+    every, n_super, tail = _layout(cfg)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    B, S, d = x.shape
+    positions = None if decode else jnp.arange(S)[None, :]
+    shared_p = params["shared_attn"]
+
+    # reshape mamba params to [n_super, every, ...]
+    mam = jax.tree.map(
+        lambda a: a.reshape((n_super, every) + a.shape[1:]), params["mamba"]
+    )
+
+    def super_block(x, xs):
+        layer_p, mamba_state, attn_cache = xs
+        x = seq_constraint(cfg, x)
+
+        def inner(x, lp_state):
+            lp, st = lp_state
+            return _mamba_block(cfg, lp, x, st)
+
+        if mamba_state is None:
+            for j in range(every):
+                lp = jax.tree.map(lambda a: a[j], layer_p)
+                x, _ = _mamba_block(cfg, lp, x, None)
+            new_states = None
+        else:
+            new_states = []
+            for j in range(every):
+                lp = jax.tree.map(lambda a: a[j], layer_p)
+                st = jax.tree.map(lambda a: a[j], mamba_state)
+                x, ns = _mamba_block(cfg, lp, x, st)
+                new_states.append(ns)
+            new_states = jax.tree.map(lambda *ls: jnp.stack(ls), *new_states)
+        x, new_cache = _shared_attn_block(
+            cfg, shared_p, x, attn_cache, decode=decode, positions=positions
+        )
+        return x, (new_states, new_cache)
+
+    super_block = _remat(cfg, super_block)
+
+    if caches is not None:
+        mamba_states = caches["mamba"]  # [n_super, every, ...]
+        attn_caches = caches["attn"]  # [n_super, ...]
+    else:
+        mamba_states, attn_caches = None, None
+
+    if cfg.scan_layers and caches is not None:
+        # caches ride the carry, updated in place (see lm._run_segment)
+        def scan_step(carry, xs):
+            x, mst, act = carry
+            i, layer_p = xs
+            mst_i = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), mst
+            )
+            act_i = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), act
+            )
+            x, (new_m, new_a) = super_block(x, (layer_p, mst_i, act_i))
+            upd = lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                a, n.astype(a.dtype), i, 0
+            )
+            mst = jax.tree.map(upd, mst, new_m)
+            act = jax.tree.map(upd, act, new_a)
+            return (x, mst, act), None
+
+        (x, new_mamba, new_attn), _ = jax.lax.scan(
+            scan_step, (x, mamba_states, attn_caches), (jnp.arange(n_super), mam)
+        )
+    elif cfg.scan_layers:
+        def scan_step(x, layer_p):
+            x, _ = super_block(x, (layer_p, None, None))
+            return x, None
+
+        x, _ = jax.lax.scan(scan_step, x, mam)
+        new_mamba, new_attn = None, None
+    else:
+        new_m, new_a = [], []
+        for i in range(n_super):
+            xs = jax.tree.map(lambda a: a[i], (mam, mamba_states, attn_caches))
+            x, (nm, na) = super_block(x, xs)
+            new_m.append(nm)
+            new_a.append(na)
+        new_mamba = (
+            jax.tree.map(lambda *ls: jnp.stack(ls), *new_m) if caches is not None else None
+        )
+        new_attn = (
+            jax.tree.map(lambda *ls: jnp.stack(ls), *new_a) if caches is not None else None
+        )
+
+    new_tail = None
+    if tail:
+        tail_p = params["tail"]
+        tail_states = caches["tail"] if caches is not None else None
+        new_tail_l = []
+        for j in range(tail):
+            lp = jax.tree.map(lambda a: a[j], tail_p)
+            st = jax.tree.map(lambda a: a[j], tail_states) if tail_states is not None else None
+            x, ns = _mamba_block(cfg, lp, x, st)
+            new_tail_l.append(ns)
+        if caches is not None:
+            new_tail = jax.tree.map(lambda *ls: jnp.stack(ls), *new_tail_l)
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    new_caches = None
+    if caches is not None:
+        new_caches = {"mamba": new_mamba, "attn": new_attn}
+        if tail:
+            new_caches["tail"] = new_tail
+    return x, new_caches, jnp.float32(0.0)
+
+
+def hybrid_cache(cfg, batch: int, max_len: int, abstract: bool = False):
+    every, n_super, tail = _layout(cfg)
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+
+    def make(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    def mamba_state(lead):
+        return {
+            "ssm": make(lead + (batch, H, s.d_state, s.head_dim), jnp.float32),
+            "conv": make(lead + (batch, s.conv_kernel - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        }
+
+    hd = cfg.resolved_head_dim
+    Smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = jnp.dtype(cfg.dtype)
+    attn_cache = {
+        "k": make((n_super, batch, Smax, cfg.n_kv_heads, hd), dt),
+        "v": make((n_super, batch, Smax, cfg.n_kv_heads, hd), dt),
+        "pos": make((n_super, batch), jnp.int32),
+    }
+    if cfg.sliding_window and Smax <= cfg.sliding_window:
+        kv_pos = make((n_super, batch, Smax), jnp.int32)
+        attn_cache["kv_pos"] = kv_pos if abstract else kv_pos - 1
+    out = {"mamba": mamba_state((n_super, every)), "attn": attn_cache}
+    if tail:
+        out["tail"] = mamba_state((tail,))
+    return out

@@ -1,0 +1,356 @@
+"""Generic decoder-LM assembly.
+
+Covers: dense GQA transformers (phi3-medium, starcoder2, qwen3, minitron),
+MLA (deepseek-v2), MoE (mixtral, deepseek-v2), RWKV6, and the VLM variant
+(phi-3-vision: precomputed patch embeddings prepended to the token stream).
+
+The layer stack is organized as *segments* — runs of structurally identical
+blocks scanned together with stacked params (bounded HLO, fast 512-device
+compiles). DeepSeek-V2's leading dense layer is its own segment.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.base import Ctx, apply_norm, linear, norm_params, seq_constraint
+
+
+# ---------------------------------------------------------------------------
+# Segment layout
+# ---------------------------------------------------------------------------
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """Return [(block_kind, count), ...] covering cfg.n_layers."""
+    if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        return [("rwkv", cfg.n_layers)]
+    if cfg.moe is not None and cfg.moe.num_experts > 0:
+        k = cfg.moe.first_k_dense
+        segs = []
+        if k:
+            segs.append(("dense", k))
+        segs.append(("moe", cfg.n_layers - k))
+        return segs
+    return [("dense", cfg.n_layers)]
+
+
+def _block_params(ctx: Ctx, cfg: ModelConfig, kind: str, count: int):
+    if kind == "rwkv":
+        p = rwkv_block_params = {
+            "ln1": norm_params(ctx, cfg, cfg.d_model, stacked=count),
+            "ln2": norm_params(ctx, cfg, cfg.d_model, stacked=count),
+            "body": ssm_mod.rwkv6_params(ctx, cfg, stacked=count),
+        }
+        return p
+    p = {
+        "ln1": norm_params(ctx, cfg, cfg.d_model, stacked=count),
+        "ln2": norm_params(ctx, cfg, cfg.d_model, stacked=count),
+    }
+    if cfg.attn_kind == "mla":
+        p["attn"] = attn.mla_params(ctx, cfg, stacked=count)
+    else:
+        p["attn"] = attn.gqa_params(ctx, cfg, stacked=count)
+    if kind == "moe":
+        p["mlp"] = mlp_mod.moe_params(ctx, cfg, stacked=count)
+    else:
+        d_ff = cfg.d_ff
+        if kind == "dense" and cfg.moe is not None and cfg.moe.dense_d_ff:
+            d_ff = cfg.moe.dense_d_ff
+        p["mlp"] = mlp_mod.mlp_params(ctx, cfg, d_ff=d_ff, stacked=count)
+    return p
+
+
+def _block_apply(cfg, kind, p, x, cache, *, decode, positions):
+    """One block. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    if kind == "rwkv":
+        if cache is None:
+            state, tm_x, cm_x = None, None, None
+        else:
+            state, tm_x, cm_x = cache["S"], cache["tm_x"], cache["cm_x"]
+        h = apply_norm(cfg, x, p["ln1"])
+        y, (state, tm_x) = ssm_mod.rwkv6_time_mix(cfg, p["body"]["tm"], h, state=state, last_x=tm_x)
+        x = x + y
+        h = apply_norm(cfg, x, p["ln2"])
+        y, cm_x = ssm_mod.rwkv6_channel_mix(cfg, p["body"]["cm"], h, last_x=cm_x)
+        x = x + y
+        new_cache = None
+        if cache is not None:
+            new_cache = {"S": state, "tm_x": tm_x, "cm_x": cm_x}
+        return x, new_cache, aux
+
+    h = apply_norm(cfg, x, p["ln1"])
+    if cfg.attn_kind == "mla":
+        y, new_cache = attn.mla_forward(cfg, p["attn"], h, positions=positions, cache=cache, decode=decode)
+    else:
+        y, new_cache = attn.gqa_forward(cfg, p["attn"], h, positions=positions, cache=cache, decode=decode)
+    x = x + y
+    h = apply_norm(cfg, x, p["ln2"])
+    if kind == "moe":
+        y, aux = mlp_mod.moe_forward(cfg, p["mlp"], h)
+    else:
+        y = mlp_mod.mlp_forward(cfg, p["mlp"], h)
+    x = x + y
+    return x, new_cache, aux
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+
+
+def _run_segment(cfg, kind, params, x, caches, *, decode, positions):
+    """Scan (or unroll) one segment. caches: stacked tree or None."""
+    count = jax.tree.leaves(params)[0].shape[0]
+
+    def body(x, layer_p, layer_cache):
+        x = seq_constraint(cfg, x)
+        return _block_apply(cfg, kind, layer_p, x, layer_cache, decode=decode, positions=positions)
+
+    body = _remat(cfg, body)
+
+    if not cfg.scan_layers:
+        aux_total = jnp.float32(0.0)
+        new_caches = [] if caches is not None else None
+        for i in range(count):
+            lp = jax.tree.map(lambda a: a[i], params)
+            lc = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+            x, nc, aux = body(x, lp, lc)
+            aux_total += aux
+            if new_caches is not None:
+                new_caches.append(nc)
+        stacked = (
+            jax.tree.map(lambda *ls: jnp.stack(ls), *new_caches)
+            if new_caches
+            else None
+        )
+        return x, stacked, aux_total
+
+    if caches is None:
+        def scan_step(carry, layer_p):
+            x, aux = carry
+            x, _, aux_i = body(x, layer_p, None)
+            return (x, aux + aux_i), None
+
+        (x, aux), _ = jax.lax.scan(scan_step, (x, jnp.float32(0.0)), params)
+        return x, None, aux
+
+    # caches ride the CARRY and are updated in place (dynamic-update-slice
+    # on the stacked buffer) — scan ys would allocate a second full cache,
+    # which for decode_32k-scale KV caches doubles HBM.
+    def scan_step(carry, xs):
+        x, aux, cch = carry
+        i, layer_p = xs
+        layer_cache = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), cch
+        )
+        x, new_cache, aux_i = body(x, layer_p, layer_cache)
+        cch = jax.tree.map(
+            lambda a, nc: jax.lax.dynamic_update_index_in_dim(
+                a, nc.astype(a.dtype), i, 0
+            ),
+            cch,
+            new_cache,
+        )
+        return (x, aux + aux_i, cch), None
+
+    (x, aux, new_caches), _ = jax.lax.scan(
+        scan_step,
+        (x, jnp.float32(0.0), caches),
+        (jnp.arange(count), params),
+    )
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params / forward
+# ---------------------------------------------------------------------------
+
+
+def lm_params(ctx: Ctx, cfg: ModelConfig):
+    V, d = cfg.padded_vocab, cfg.d_model
+    p: Dict[str, Any] = {
+        "embed": ctx.param((V, d), ("vocab", "embed"), init="normal", scale=0.02),
+        "final_norm": norm_params(ctx, cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = ctx.param((d, V), ("embed", "vocab"))
+    if cfg.frontend == "vision_stub":
+        p["patch_proj"] = ctx.param((d, d), ("embed", "embed2"))
+    for i, (kind, count) in enumerate(segments(cfg)):
+        p[f"seg{i}"] = _block_params(ctx, cfg, kind, count)
+    return p
+
+
+def _embed_inputs(cfg, params, batch):
+    """Token (+optional patch) embedding. Returns x [B,S,d]."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.frontend == "vision_stub" and "patch_embed" in batch:
+        patches = linear(batch["patch_embed"].astype(x.dtype), params["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def lm_forward(cfg, params, batch, *, caches=None, decode=False):
+    """Returns (hidden [B,S,d], new_caches, aux)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    if decode:
+        positions = None  # per-layer cache carries pos
+    else:
+        positions = jnp.arange(S)[None, :]
+    aux_total = jnp.float32(0.0)
+    new_caches = {} if caches is not None else None
+    for i, (kind, count) in enumerate(segments(cfg)):
+        seg_cache = caches.get(f"seg{i}") if caches is not None else None
+        x, nc, aux = _run_segment(
+            cfg, kind, params[f"seg{i}"], x, seg_cache, decode=decode, positions=positions
+        )
+        aux_total += aux
+        if new_caches is not None:
+            new_caches[f"seg{i}"] = nc
+    x = apply_norm(cfg, x, params["final_norm"])
+    return x, new_caches, aux_total
+
+
+def unembed(cfg, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jax.lax.dot_general(
+        h, w.astype(h.dtype), (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def loss_from_hidden(cfg, params, h, batch):
+    """Chunked-vocab cross entropy on hidden states. Returns (loss, metrics)."""
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    B, S, d = h.shape
+    St = targets.shape[1]
+    if St < S:  # vlm: patch prefix carries no loss
+        h = h[:, S - St :]
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+
+    chunk = cfg.loss_chunk
+    if chunk and St % chunk == 0 and St > chunk:
+        nc = St // chunk
+
+        def step(carry, xs):
+            h_c, t_c, m_c = xs  # [B,chunk,...]
+            logits = unembed(cfg, params, h_c)  # [B,chunk,V] f32
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+            nll = (lse - gold) * m_c
+            correct = (jnp.argmax(logits, -1) == t_c) * m_c
+            return (
+                carry[0] + jnp.sum(nll),
+                carry[1] + jnp.sum(m_c),
+                carry[2] + jnp.sum(correct),
+            ), None
+
+        hs = h.reshape(B, nc, chunk, d).swapaxes(0, 1)
+        ts = targets.reshape(B, nc, chunk).swapaxes(0, 1)
+        ms = mask.reshape(B, nc, chunk).swapaxes(0, 1)
+        (tot, cnt, corr), _ = jax.lax.scan(
+            step, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), (hs, ts, ms)
+        )
+    else:
+        logits = unembed(cfg, params, h)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        tot, cnt = jnp.sum(nll), jnp.sum(mask)
+        corr = jnp.sum((jnp.argmax(logits, -1) == targets) * mask)
+
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"loss": loss, "accuracy": corr / jnp.maximum(cnt, 1.0)}
+
+
+def lm_loss(cfg, params, batch):
+    """Full LM training loss (forward + chunked CE + MoE aux)."""
+    h, _, aux = lm_forward(cfg, params, batch)
+    loss, metrics = loss_from_hidden(cfg, params, h, batch)
+    if cfg.moe is not None and cfg.moe.num_experts:
+        loss = loss + cfg.moe.router_aux_weight * aux / max(cfg.n_layers, 1)
+    metrics = dict(metrics, loss=loss, aux=aux)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _seg_cache_init(cfg, kind, count, batch, max_len, abstract: bool):
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.ssm.head_dim if cfg.ssm is not None else 0
+
+    def make(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    if kind == "rwkv":
+        H = cfg.d_model // hd
+        return {
+            "S": make((count, batch, H, hd, hd), jnp.float32),
+            "tm_x": make((count, batch, 1, cfg.d_model), dt),
+            "cm_x": make((count, batch, 1, cfg.d_model), dt),
+        }
+    if cfg.attn_kind == "mla":
+        spec = attn.mla_cache_spec(cfg, batch, max_len, count)
+    else:
+        spec = attn.gqa_cache_spec(cfg, batch, max_len, count)
+    out = {k: make(v.shape, v.dtype) for k, v in spec.items()}
+    if not abstract and "kv_pos" in out:
+        out["kv_pos"] = out["kv_pos"] - 1
+    return out
+
+
+def lm_cache(cfg, batch: int, max_len: int, abstract: bool = False):
+    return {
+        f"seg{i}": _seg_cache_init(cfg, kind, count, batch, max_len, abstract)
+        for i, (kind, count) in enumerate(segments(cfg))
+    }
+
+
+def lm_prefill(cfg, params, batch, max_len: int):
+    """Run the prompt, fill caches, return (last_logits [B,V], caches)."""
+    B, S = batch["tokens"].shape
+    caches = lm_cache(cfg, B, max_len)
+    # set pos after prefill
+    h, new_caches, _ = lm_forward(cfg, params, batch, caches=caches)
+
+    def fix_pos(c):
+        if c is None:
+            return None
+        c = dict(c)
+        if "pos" in c:
+            c["pos"] = jnp.full_like(c["pos"], S)
+        return c
+
+    new_caches = {k: fix_pos(v) for k, v in new_caches.items()}
+    logits = unembed(cfg, params, h[:, -1:])[:, 0]
+    return logits, new_caches
+
+
+def lm_decode_step(cfg, params, caches, tokens):
+    """tokens [B,1] -> (logits [B,V], new_caches)."""
+    h, new_caches, _ = lm_forward(cfg, params, {"tokens": tokens}, caches=caches, decode=True)
+    logits = unembed(cfg, params, h)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,193 @@
+"""MLP and Mixture-of-Experts blocks.
+
+Two MoE dispatch implementations, selectable per-config (and the subject of
+one §Perf hillclimb):
+
+- ``einsum``: GShard/Mesh-TF one-hot dispatch/combine einsums. Partitions
+  trivially under GSPMD but burns dispatch FLOPs proportional to
+  tokens x experts x capacity.
+- ``gather``: sorted scatter/gather dispatch into an [E, C, d] buffer and a
+  batched per-expert matmul — FLOPs equal the real expert compute (plus
+  capacity padding), no dispatch matmuls.
+
+Both honour per-group capacity (tokens over capacity are dropped and pass
+through the residual, Switch-style), and both emit a load-balance auxiliary
+loss (Switch/GShard aux).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Ctx, gelu, linear, silu
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(ctx: Ctx, cfg, d_ff: Optional[int] = None, stacked: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": ctx.param(lead + (d, ff), la + ("embed", "ffn")),
+            "w_up": ctx.param(lead + (d, ff), la + ("embed", "ffn")),
+            "w_down": ctx.param(lead + (ff, d), la + ("ffn", "embed")),
+        }
+    return {
+        "w_up": ctx.param(lead + (d, ff), la + ("embed", "ffn")),
+        "b_up": ctx.param(lead + (ff,), la + ("ffn",), init="zeros"),
+        "w_down": ctx.param(lead + (ff, d), la + ("ffn", "embed")),
+        "b_down": ctx.param(lead + (d,), la + ("embed",), init="zeros"),
+    }
+
+
+def mlp_forward(cfg, p, x):
+    if cfg.mlp_kind == "swiglu":
+        return linear(silu(linear(x, p["w_gate"])) * linear(x, p["w_up"]), p["w_down"])
+    h = gelu(linear(x, p["w_up"]) + p["b_up"].astype(x.dtype))
+    return linear(h, p["w_down"]) + p["b_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_params(ctx: Ctx, cfg, stacked: Optional[int] = None):
+    m = cfg.moe
+    d, E, ff = cfg.d_model, m.num_experts, m.expert_d_ff
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+    p = {
+        "router": ctx.param(lead + (d, E), la + ("embed", "experts"), scale=0.02, init="normal"),
+        "w_gate": ctx.param(lead + (E, d, ff), la + ("experts", "embed", "ffn")),
+        "w_up": ctx.param(lead + (E, d, ff), la + ("experts", "embed", "ffn")),
+        "w_down": ctx.param(lead + (E, ff, d), la + ("experts", "ffn", "embed")),
+    }
+    if m.num_shared:
+        sff = m.expert_d_ff * m.num_shared
+        p["shared"] = {
+            "w_gate": ctx.param(lead + (d, sff), la + ("embed", "ffn")),
+            "w_up": ctx.param(lead + (d, sff), la + ("embed", "ffn")),
+            "w_down": ctx.param(lead + (sff, d), la + ("ffn", "embed")),
+        }
+    return p
+
+
+def _router(cfg, p, x):
+    """Top-k routing. x [T, d] -> (gates [T,k], ids [T,k], aux_loss)."""
+    m = cfg.moe
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e (fraction_tokens_e * mean_prob_e)
+    E = m.num_experts
+    onehot = jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32)  # top-1 counts
+    frac = jnp.mean(onehot, axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mean_prob)
+    return gates, ids, aux
+
+
+def _expert_ffn(cfg, w_gate, w_up, w_down, xb):
+    """Batched per-expert SwiGLU. xb [E, C, d] -> [E, C, d]."""
+    h = jnp.einsum("ecd,edf->ecf", xb, w_gate.astype(xb.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up.astype(xb.dtype))
+    h = silu(h) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(xb.dtype))
+
+
+def moe_forward_gather(cfg, p, x2d):
+    """Sorted scatter/gather dispatch. x2d [T, d] -> ([T, d], aux)."""
+    m = cfg.moe
+    T, d = x2d.shape
+    E, k = m.num_experts, m.top_k
+    C = max(int(m.capacity_factor * k * T / E), 1)
+
+    gates, ids, aux = _router(cfg, p, x2d)
+    flat_ids = ids.reshape(-1)  # [T*k]
+    flat_gates = gates.reshape(-1)
+    token_idx = jnp.repeat(jnp.arange(T), k)
+
+    # position of each (token, slot) within its expert via one-hot cumsum
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # [T*k, E]
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # [T*k, E]
+    pos = jnp.sum(pos_in_expert, axis=1)  # [T*k]
+    keep = pos < C
+    dest = jnp.where(keep, flat_ids * C + pos, E * C)  # dropped -> overflow row
+
+    buf = jnp.zeros((E * C + 1, d), x2d.dtype).at[dest].add(x2d[token_idx])
+    xb = buf[: E * C].reshape(E, C, d)
+    yb = _expert_ffn(cfg, p["w_gate"], p["w_up"], p["w_down"], xb)
+    yb = jnp.concatenate([yb.reshape(E * C, d), jnp.zeros((1, d), x2d.dtype)])
+
+    contrib = yb[dest] * (flat_gates * keep)[:, None].astype(x2d.dtype)
+    out = jnp.zeros((T, d), x2d.dtype).at[token_idx].add(contrib)
+    return out, aux
+
+
+def moe_forward_einsum(cfg, p, x2d):
+    """GShard one-hot dispatch/combine einsums. x2d [T, d] -> ([T, d], aux)."""
+    m = cfg.moe
+    T, d = x2d.shape
+    E, k = m.num_experts, m.top_k
+    C = max(int(m.capacity_factor * k * T / E), 1)
+
+    gates, ids, aux = _router(cfg, p, x2d)
+    # dispatch tensor [T, E, C]
+    dispatch = jnp.zeros((T, E, C), jnp.float32)
+    combine = jnp.zeros((T, E, C), jnp.float32)
+    for slot in range(k):  # k is small (2 or 6); unrolled
+        oh = jax.nn.one_hot(ids[:, slot], E, dtype=jnp.int32)
+        pos = (jnp.cumsum(oh, axis=0) - 1) * oh
+        within = jnp.sum(pos, axis=1)
+        keep = within < C
+        oh_c = jax.nn.one_hot(within, C, dtype=jnp.float32) * keep[:, None]
+        d_slot = oh.astype(jnp.float32)[:, :, None] * oh_c[:, None, :]
+        dispatch = dispatch + d_slot
+        combine = combine + d_slot * gates[:, slot][:, None, None]
+
+    xb = jnp.einsum("tec,td->ecd", dispatch.astype(x2d.dtype), x2d)
+    yb = _expert_ffn(cfg, p["w_gate"], p["w_up"], p["w_down"], xb)
+    out = jnp.einsum("tec,ecd->td", combine.astype(x2d.dtype), yb)
+    return out, aux
+
+
+def moe_forward(cfg, p, x):
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    from repro.models import moe_sharded
+
+    m = cfg.moe
+    B, S, d = x.shape
+    path = moe_sharded.pick_moe_path(cfg, B, S)
+    if path == "ep_a2a":
+        y, aux = moe_sharded.moe_forward_ep_a2a(cfg, p, x)
+        y = y.reshape(B * S, d)
+    elif path == "ep_local":
+        y, aux = moe_sharded.moe_forward_ep_local(cfg, p, x)
+        y = y.reshape(B * S, d)
+    elif path == "local":
+        y, aux = moe_sharded.moe_forward_local(cfg, p, x)
+        y = y.reshape(B * S, d)
+    elif path == "einsum":
+        y, aux = moe_forward_einsum(cfg, p, x.reshape(B * S, d))
+    else:
+        y, aux = moe_forward_gather(cfg, p, x.reshape(B * S, d))
+    if m.num_shared:
+        sp = p["shared"]
+        x2d = x.reshape(B * S, d)
+        y = y + linear(
+            silu(linear(x2d, sp["w_gate"])) * linear(x2d, sp["w_up"]), sp["w_down"]
+        )
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,378 @@
+"""Recurrent-family blocks: RWKV6 (Finch) and Mamba2 (SSD).
+
+RWKV6 time-mix implements the v6 hallmark: *data-dependent decay* w_t
+produced by a low-rank adapter, plus the per-head bonus u. Training uses a
+sequential lax.scan over time (baseline) or a chunked matmul form
+(``ssm.chunk_len``) — the chunked form is the TPU-native adaptation (MXU
+matmuls instead of a length-T recurrence) and one of the §Perf levers.
+
+Mamba2 implements the SSD scalar-decay recurrence with the chunked
+algorithm from the paper (intra-chunk quadratic + inter-chunk state scan).
+
+Both expose single-step ``*_decode`` updates with O(1) state for serving.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Ctx, linear, rms_norm, silu
+
+
+def _token_shift(x, last=None):
+    """RWKV token shift: x_{t-1} (zeros / carry for t=0). x [B,T,d]."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_params(ctx: Ctx, cfg, stacked: Optional[int] = None):
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    lora = 64
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+
+    def v(shape, axes, **kw):
+        return ctx.param(lead + shape, la + axes, **kw)
+
+    return {
+        "tm": {  # time mix
+            "mu_r": v((d,), ("embed",), init="uniform", scale=0.5),
+            "mu_k": v((d,), ("embed",), init="uniform", scale=0.5),
+            "mu_v": v((d,), ("embed",), init="uniform", scale=0.5),
+            "mu_g": v((d,), ("embed",), init="uniform", scale=0.5),
+            "mu_w": v((d,), ("embed",), init="uniform", scale=0.5),
+            "w_r": v((d, H, hd), ("embed", "heads", "head_dim")),
+            "w_k": v((d, H, hd), ("embed", "heads", "head_dim")),
+            "w_v": v((d, H, hd), ("embed", "heads", "head_dim")),
+            "w_g": v((d, d), ("embed", "embed2")),
+            "w_o": v((d, d), ("embed2", "embed")),
+            "w0": v((d,), ("embed",), init="normal", scale=0.5),
+            "w_lora_a": v((d, 64), ("embed", "lora")),
+            "w_lora_b": v((64, d), ("lora", "embed")),
+            "u": v((H, hd), ("heads", "head_dim"), init="normal", scale=0.5),
+            "ln_scale": v((d,), ("embed",), init="ones"),
+        },
+        "cm": {  # channel mix
+            "mu_k": v((d,), ("embed",), init="uniform", scale=0.5),
+            "mu_r": v((d,), ("embed",), init="uniform", scale=0.5),
+            "w_k": v((d, ff), ("embed", "ffn")),
+            "w_v": v((ff, d), ("ffn", "embed")),
+            "w_r": v((d, d), ("embed", "embed2")),
+        },
+    }
+
+
+def _rwkv6_projections(cfg, p, x, last_x):
+    """Shared train/decode projection math. x [B,T,d]."""
+    hd = cfg.ssm.head_dim
+    B, T, d = x.shape
+    H = d // hd
+    xx = _token_shift(x, last_x)
+
+    def mix(mu):
+        return x + (xx - x) * mu.astype(x.dtype)
+
+    r = jnp.einsum("btd,dhk->bthk", mix(p["mu_r"]), p["w_r"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", mix(p["mu_k"]), p["w_k"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", mix(p["mu_v"]), p["w_v"].astype(x.dtype))
+    g = silu(linear(mix(p["mu_g"]), p["w_g"]))
+    # data-dependent decay (the RWKV6 signature)
+    w_dyn = jnp.tanh(linear(mix(p["mu_w"]), p["w_lora_a"]))
+    w_dyn = linear(w_dyn, p["w_lora_b"])
+    log_w = -jnp.exp(
+        jnp.clip(p["w0"].astype(jnp.float32) + w_dyn.astype(jnp.float32), -8.0, 4.0)
+    ).reshape(B, T, H, hd)  # in (-inf, 0)
+    return r, k, v, g, log_w
+
+
+def rwkv6_time_mix(cfg, p, x, *, state=None, last_x=None):
+    """WKV6 recurrence. x [B,T,d] -> (y [B,T,d], (state, new_last_x)).
+
+    state [B,H,hd,hd] maps k-dim x v-dim. Dispatches to the chunked
+    matmul form (TPU-native, MXU-friendly) when T divides the chunk
+    length; single steps / ragged tails use the sequential scan.
+    """
+    hd = cfg.ssm.head_dim
+    B, T, d = x.shape
+    H = d // hd
+    r, k, v, g, log_w = _rwkv6_projections(cfg, p, x, last_x)
+    u = p["u"].astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    Lc = cfg.ssm.chunk_len
+    if T > 1 and Lc > 1 and T % Lc == 0:
+        state, outs_bt = _wkv6_chunked(r, k, v, log_w, u, state, Lc)
+        y = outs_bt.reshape(B, T, d).astype(x.dtype)
+        return _rwkv6_out(cfg, p, x, y, g), (state, x[:, -1:])
+
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs  # each [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B,H,hd,hd]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, out
+
+    w = jnp.exp(log_w)
+    xs = tuple(
+        a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w)
+    )  # each [T,B,H,hd]
+    state, outs = jax.lax.scan(step, state, xs)
+    y = outs.swapaxes(0, 1).reshape(B, T, d).astype(x.dtype)  # [B,T,d]
+    return _rwkv6_out(cfg, p, x, y, g), (state, x[:, -1:])
+
+
+def _rwkv6_out(cfg, p, x, y, g):
+    """Per-head group norm + gate + output projection."""
+    hd = cfg.ssm.head_dim
+    B, T, d = x.shape
+    H = d // hd
+    yh = y.reshape(B, T, H, hd)
+    yh = rms_norm(yh, jnp.ones((hd,), jnp.float32), cfg.norm_eps)
+    y = yh.reshape(B, T, d) * p["ln_scale"].astype(x.dtype)
+    y = y * g
+    return linear(y, p["w_o"])
+
+
+def _wkv6_chunked(r, k, v, log_w, u, state, Lc):
+    """Chunked WKV6: intra-chunk quadratic matmuls + inter-chunk state scan.
+
+    The TPU-native adaptation of the data-dependent-decay recurrence: all
+    per-position decay products are computed as exp of log-decay
+    *differences* (always <= 0, numerically safe — no 1/cumprod blowups),
+    and the T-step recurrence becomes T/Lc scan steps of MXU matmuls.
+    ~Lc x less HBM state traffic than the sequential scan (the §Perf fix
+    for rwkv6 prefill_32k's 194 s memory term).
+
+    r,k,v,log_w: [B,T,H,hd]; u: [H,hd]; state: [B,H,hd_k,hd_v].
+    """
+    B, T, H, hd = r.shape
+    nC = T // Lc
+    f32 = jnp.float32
+
+    rc = r.astype(f32).reshape(B, nC, Lc, H, hd).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(B, nC, Lc, H, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(B, nC, Lc, H, hd).transpose(1, 0, 3, 2, 4)
+    # log decay arrives directly from the projection (no log(exp(.)) round
+    # trip — its 1/w gradient overflows for strong decays)
+    lwc = log_w.astype(f32).reshape(B, nC, Lc, H, hd).transpose(1, 0, 3, 2, 4)
+    # shapes now [nC, B, H, Lc, hd]
+
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool), k=-1)  # strictly lower
+
+    def chunk_step(S, xs):
+        rr, kk, vv, ll = xs  # [B,H,Lc,hd]
+        cum = jnp.cumsum(ll, axis=2)  # inclusive
+        cum_ex = cum - ll  # exclusive
+        total = cum[:, :, -1:, :]  # [B,H,1,hd]
+
+        # intra-chunk: decay(t,s) = exp(cum_ex[t] - cum[s]) for s < t.
+        # mask BEFORE exp: upper-triangle differences are positive (cum is
+        # decreasing), exp overflows, and where-after-exp leaks NaN through
+        # the VJP (0 cotangent x inf primal).
+        dqk = cum_ex[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,H,L,L,hd]
+        dqk = jnp.exp(jnp.where(tri[None, None, :, :, None], dqk, -1e30))
+        tmp = dqk * rr[:, :, :, None, :]
+        scores = jnp.einsum("bhtsd,bhsd->bhts", tmp, kk)
+        # u-bonus on the diagonal: r_t . (u <*> k_t)
+        diag = jnp.einsum("bhtd,hd->bht", rr * kk, u)
+        scores = scores + jnp.eye(Lc, dtype=f32)[None, None] * diag[:, :, :, None]
+        intra = jnp.einsum("bhts,bhsv->bhtv", scores, vv)
+
+        # inter-chunk: r_t decayed to chunk start x entering state
+        r_dec = rr * jnp.exp(cum_ex)
+        inter = jnp.einsum("bhtd,bhdv->bhtv", r_dec, S)
+
+        # state update: S' = exp(total) <*> S + sum_s k_s exp(total - cum[s]) (x) v_s
+        k_dec = kk * jnp.exp(total - cum)
+        S_new = jnp.exp(total).swapaxes(2, 3) * S + jnp.einsum(
+            "bhsd,bhsv->bhdv", k_dec, vv
+        )
+        return S_new, intra + inter
+
+    state, outs = jax.lax.scan(chunk_step, state, (rc, kc, vc, lwc))
+    # outs [nC, B, H, Lc, hd] -> [B, T, H*hd]
+    outs = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H * hd)
+    return state, outs
+
+
+def rwkv6_channel_mix(cfg, p, x, *, last_x=None):
+    xx = _token_shift(x, last_x)
+
+    def mix(mu):
+        return x + (xx - x) * mu.astype(x.dtype)
+
+    k = linear(mix(p["mu_k"]), p["w_k"])
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(linear(mix(p["mu_r"]), p["w_r"]).astype(jnp.float32)).astype(x.dtype)
+    return r * linear(k, p["w_v"]), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_params(ctx: Ctx, cfg, stacked: Optional[int] = None):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    lead = () if stacked is None else (stacked,)
+    la = () if stacked is None else ("layers",)
+
+    def v(shape, axes, **kw):
+        return ctx.param(lead + shape, la + axes, **kw)
+
+    return {
+        "w_in": v((d, 2 * d_inner + 2 * s.d_state + H), ("embed", "ffn")),
+        "conv_w": v((conv_dim, s.conv_kernel), ("ffn", "conv"), init="normal", scale=0.1),
+        "conv_b": v((conv_dim,), ("ffn",), init="zeros"),
+        "a_log": v((H,), ("heads",), init="uniform", scale=1.0),
+        "dt_bias": v((H,), ("heads",), init="normal", scale=0.5),
+        "d_skip": v((H,), ("heads",), init="ones"),
+        "norm_scale": v((d_inner,), ("ffn",), init="ones"),
+        "w_out": v((d_inner, d), ("ffn", "embed")),
+    }
+
+
+def _mamba2_split(cfg, p, x):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    zxbcdt = linear(x, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * s.d_state], axis=-1)
+    return z, xbc, dt, d_inner, H
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv1d. xbc [B,T,C], w [C,K]."""
+    K = w.shape[-1]
+    if conv_state is None:
+        pad = jnp.zeros_like(xbc[:, : K - 1])
+    else:
+        pad = conv_state  # [B,K-1,C]
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B,T+K-1,C]
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * w[:, i].astype(xbc.dtype) for i in range(K)
+    )
+    new_state = xp[:, -(K - 1) :] if K > 1 else jnp.zeros_like(xbc[:, :0])
+    return silu(out + b.astype(xbc.dtype)), new_state
+
+
+def _mamba_head_constraint(cfg, t):
+    """[B, T, H, ...] mamba tensors: batch->data, heads->model. Without this
+    the uneven w_in split leaves dt/xs replicated and the chunked decay
+    tensors ([B,nC,Lc,Lc,H] f32) blow past HBM (measured on zamba2)."""
+    if not (cfg.act_shard_data and cfg.act_shard_model) or t.ndim < 3:
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    B, H = t.shape[0], t.shape[2]
+    b_ax = "data" if B % cfg.act_shard_data == 0 else None
+    h_ax = "model" if H % cfg.act_shard_model == 0 else None
+    if b_ax is None and h_ax is None:
+        return t
+    spec = P(b_ax, None, h_ax, *([None] * (t.ndim - 3)))
+    return jax.lax.with_sharding_constraint(t, spec)
+
+
+def mamba2_forward(cfg, p, x, *, state=None, conv_state=None):
+    """Chunked SSD. x [B,T,d] -> (y, (ssm_state [B,H,hd,N], conv_state))."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    z, xbc, dt, d_inner, H = _mamba2_split(cfg, p, x)
+    hd, N = s.head_dim, s.d_state
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, T, H, hd)
+    xs = _mamba_head_constraint(cfg, xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = _mamba_head_constraint(cfg, dt)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H], negative
+    dA = dt * A[None, None, :]  # [B,T,H] log-decay per step
+
+    Lc = min(s.chunk_len, T)
+    assert T % Lc == 0, f"T={T} not divisible by chunk {Lc}"
+    nC = T // Lc
+
+    # reshape into chunks
+    xs_c = xs.reshape(B, nC, Lc, H, hd).astype(jnp.float32)
+    B_c = Bm.reshape(B, nC, Lc, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nC, Lc, N).astype(jnp.float32)
+    dA_c = dA.reshape(B, nC, Lc, H)
+    dt_c = dt.reshape(B, nC, Lc, H)
+
+    cum = jnp.cumsum(dA_c, axis=2)  # [B,nC,Lc,H] inclusive cumulative log decay
+    # intra-chunk (quadratic within chunk, causal decay mask)
+    decay_qk = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nC,Lq,Lk,H]
+    causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+    Lmask = jnp.where(causal[None, None, :, :, None], jnp.exp(decay_qk), 0.0)
+    scores = jnp.einsum("bctn,bcsn->bcts", C_c, B_c)  # [B,nC,Lq,Lk]
+    scores = scores[..., None] * Lmask  # [B,nC,Lq,Lk,H]
+    y_intra = jnp.einsum("bctsh,bcsh,bcshd->bcthd", scores, dt_c, xs_c)
+
+    # chunk states: S_c = sum_s exp(cum_end - cum_s) * dt_s * B_s x_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nC,Lc,H]
+    Sc = jnp.einsum("bcsh,bcsh,bcsn,bcshd->bchnd", decay_to_end, dt_c, B_c, xs_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nC,H] total decay per chunk
+
+    def chunk_step(S, inp):
+        Sc_i, dec_i = inp  # [B,H,N,hd], [B,H]
+        S_new = S * dec_i[..., None, None] + Sc_i
+        return S_new, S  # emit state *entering* the chunk
+
+    if state is None:
+        state = jnp.zeros((B, H, N, hd), jnp.float32)
+    state_final, S_in = jax.lax.scan(
+        chunk_step, state, (Sc.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    S_in = S_in.swapaxes(0, 1)  # [B,nC,H,N,hd] state entering each chunk
+
+    # inter-chunk: y += C_t . decay(0..t) . S_in
+    decay_from_start = jnp.exp(cum)  # [B,nC,Lc,H]
+    y_inter = jnp.einsum("bctn,bcth,bchnd->bcthd", C_c, decay_from_start, S_in)
+
+    y = (y_intra + y_inter).reshape(B, T, H, hd)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = y * silu(z)
+    y = rms_norm(y, p["norm_scale"], cfg.norm_eps)
+    return linear(y, p["w_out"]), (state_final, new_conv)
+
+
+def mamba2_decode(cfg, p, x, state, conv_state):
+    """Single-token step. x [B,1,d]; state [B,H,N,hd]; conv [B,K-1,C]."""
+    s = cfg.ssm
+    B = x.shape[0]
+    z, xbc, dt, d_inner, H = _mamba2_split(cfg, p, x)
+    hd, N = s.head_dim, s.d_state
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, H, hd).astype(jnp.float32)
+    Bm, Cm = Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * A[None])  # [B,H]
+    S_new = state * dec[..., None, None] + jnp.einsum(
+        "bh,bn,bhd->bhnd", dt, Bm, xs
+    )
+    y = jnp.einsum("bn,bhnd->bhd", Cm, S_new)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = y * silu(z)
+    y = rms_norm(y, p["norm_scale"], cfg.norm_eps)
+    return linear(y, p["w_out"]), (S_new, new_conv)

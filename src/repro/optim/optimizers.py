@@ -1,0 +1,250 @@
+"""Pure-JAX optimizer library (no optax in this environment).
+
+(init, update) pairs over pytrees. ``update`` returns *updates* to be added
+to params (optax convention), so optimizers compose with clipping and
+schedules. Optimizer-state dtype is configurable — the 236B config runs
+bf16 first/second moments + f32 master weights to fit HBM (DESIGN §6).
+
+Server-side (outer) optimizers for federated/local-update training:
+``nesterov_outer`` (DiLoCo-style outer momentum — FedAvg when lr=1, m=0)
+and ``fedopt_server`` (FedAdam / FedYogi / FedAdagrad, Reddi et al.).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0, nesterov: bool = False,
+        state_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), state
+        m = jax.tree.map(
+            lambda mm, g: momentum * mm + g.astype(state_dtype), state["m"], grads
+        )
+        if nesterov:
+            upd = jax.tree.map(
+                lambda mm, g: -(lr_t * (momentum * mm + g.astype(state_dtype))), m, grads
+            )
+        else:
+            upd = jax.tree.map(lambda mm: -lr_t * mm, m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+    master_dtype: Optional[jnp.dtype] = None,
+) -> Optimizer:
+    """AdamW with optional f32 master copy when params are bf16."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        st = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params),
+        }
+        if master_dtype is not None:
+            st["master"] = jax.tree.map(lambda p: p.astype(master_dtype), params)
+        return st
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = step + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32) if hasattr(t, "astype") else 1.0 - b1**t
+        c2 = 1.0 - b2 ** t.astype(jnp.float32) if hasattr(t, "astype") else 1.0 - b2**t
+        m = jax.tree.map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(state_dtype), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(state_dtype)),
+            state["v"],
+            grads,
+        )
+        ref = state.get("master", params)
+
+        def upd(mm, vv, p):
+            mhat = mm.astype(jnp.float32) / c1
+            vhat = vv.astype(jnp.float32) / c2
+            return -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, m, v, ref)
+        new_state = {"m": m, "v": v}
+        if "master" in state:
+            new_master = jax.tree.map(
+                lambda mp, u: mp + u.astype(mp.dtype), state["master"], updates
+            )
+            new_state["master"] = new_master
+            # params follow the master copy
+            updates = jax.tree.map(
+                lambda nm, p: nm.astype(jnp.float32) - p.astype(jnp.float32),
+                new_master,
+                params,
+            )
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable | float, eps: float = 1e-30, decay: float = 0.8,
+              clip_threshold: float = 1.0, eps_scale: float = 1e-3) -> Optimizer:
+    """Factored second-moment optimizer (memory-lean; used for 236B-scale).
+
+    Includes the parameter-scale term (Shazeer & Stern §6): the update is
+    multiplied by max(rms(param), eps_scale) so steps shrink with the
+    parameter magnitude — without it the normalized update oscillates.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def factored(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + (p.shape[-1],), jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": jax.tree.map(factored, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay if hasattr(step, "astype") else 1.0 - float(step + 1) ** -decay
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "v" in v:
+                nv = beta * v["v"] + (1 - beta) * g2
+                u = g / jnp.maximum(jnp.sqrt(nv), 1e-30)
+                new_v = {"v": nv}
+            else:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)  # [.., rows]
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)  # [.., cols]
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                denom = jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                u = g / jnp.maximum(denom, 1e-30)
+                new_v = {"vr": vr, "vc": vc}
+            scale = jnp.maximum(
+                1.0, jnp.sqrt(jnp.mean(jnp.square(u))) / clip_threshold
+            )
+            # parameter-scale: relative step sizes (Shazeer & Stern)
+            p_rms = jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32))))
+            return -lr_t * jnp.maximum(p_rms, eps_scale) * u / scale, new_v
+
+        # sequence the per-leaf updates with optimization barriers: without
+        # them the scheduler keeps every leaf's f32 pipeline alive at once
+        # (~17 GB/chip of elementwise temps on the 236B expert tree)
+        is_v = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        g_leaves, treedef = jax.tree.flatten(grads)
+        v_leaves = treedef.flatten_up_to(state["v"])
+        p_leaves = treedef.flatten_up_to(params)
+        updates_l, new_v_l = [], []
+        token = None
+        for g, v, p in zip(g_leaves, v_leaves, p_leaves):
+            if token is not None:
+                g, token = jax.lax.optimization_barrier((g, token))
+            u, nv = upd(g, v, p)
+            token = jax.lax.slice(u.reshape(-1), (0,), (1,))
+            updates_l.append(u)
+            new_v_l.append(nv)
+        updates = jax.tree.unflatten(treedef, updates_l)
+        new_v = jax.tree.unflatten(treedef, new_v_l)
+        return updates, {"v": new_v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Server-side (outer) optimizers for FedAvg / local-update training
+# ---------------------------------------------------------------------------
+
+
+def nesterov_outer(lr: float = 0.7, momentum: float = 0.9) -> Optimizer:
+    """DiLoCo outer optimizer. lr=1, momentum=0 reduces to plain FedAvg."""
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(avg_delta, state, params, step):
+        m = jax.tree.map(
+            lambda mm, d: momentum * mm + d.astype(jnp.float32), state["m"], avg_delta
+        )
+        upd = jax.tree.map(
+            lambda mm, d: lr * (momentum * mm + d.astype(jnp.float32)), m, avg_delta
+        )
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def fedopt_server(kind: str = "adam", lr: float = 0.1, b1: float = 0.9,
+                  b2: float = 0.99, tau: float = 1e-3) -> Optimizer:
+    """FedAdam / FedYogi / FedAdagrad (Reddi et al. 2021)."""
+    assert kind in ("adam", "yogi", "adagrad")
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.full(p.shape, tau * tau, jnp.float32), params),
+        }
+
+    def update(avg_delta, state, params, step):
+        m = jax.tree.map(
+            lambda mm, d: b1 * mm + (1 - b1) * d.astype(jnp.float32), state["m"], avg_delta
+        )
+
+        def new_v(vv, d):
+            d2 = jnp.square(d.astype(jnp.float32))
+            if kind == "adam":
+                return b2 * vv + (1 - b2) * d2
+            if kind == "yogi":
+                return vv - (1 - b2) * d2 * jnp.sign(vv - d2)
+            return vv + d2  # adagrad
+
+        v = jax.tree.map(new_v, state["v"], avg_delta)
+        upd = jax.tree.map(lambda mm, vv: lr * mm / (jnp.sqrt(vv) + tau), m, v)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)

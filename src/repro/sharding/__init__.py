@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    CANDIDATES,
+    PRIORITY,
+    batch_spec,
+    cache_shardings,
+    input_shardings,
+    param_shardings,
+    spec_for_leaf,
+)
+
+__all__ = [
+    "spec_for_leaf",
+    "param_shardings",
+    "cache_shardings",
+    "input_shardings",
+    "batch_spec",
+    "PRIORITY",
+    "CANDIDATES",
+]

@@ -1,0 +1,152 @@
+"""Logical-axis sharding rules: axes trees -> NamedShardings.
+
+Every parameter/cache leaf carries a tuple of logical axis names (assigned
+at construction, repro.models.base.Ctx). This module maps them onto mesh
+axes with a priority + divisibility-fallback engine:
+
+- Priority: tensor-parallel axes (vocab/ffn/experts/heads) claim "model"
+  first; FSDP axes (embed) claim "data"; leftovers (lora/embed2) take
+  whatever mesh axis is still free on their candidate list.
+- Divisibility fallback: a dimension that doesn't divide evenly by the
+  mesh-axis size is REPLICATED instead (e.g. phi3-medium's 40 q-heads or
+  starcoder2's kv=2 against a 16-way model axis). This keeps every config
+  lowerable; the cost shows up in the roofline table and is a documented
+  hillclimbing lever (§Perf: head padding).
+- Decode caches shard batch over "data" and the kv sequence over "model"
+  (long-context sequence sharding — the production layout that makes
+  decode_32k/long_500k fit in HBM).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# assignment priority: earlier names claim mesh axes first. experts > ffn:
+# expert-parallel beats per-expert TP when the expert count divides (160 on
+# deepseek); falls back to ffn TP when it doesn't (mixtral's 8 experts).
+# head_dim/qk_dim are LAST: they claim "model" only when heads couldn't
+# (phi3-medium's 40 heads, starcoder2's kv=2 — contracting-dim TP fallback).
+PRIORITY = [
+    "vocab", "experts", "ffn", "heads", "kvseq", "kv_heads",
+    "embed", "batch", "embed2", "lora", "state", "head_dim", "qk_dim",
+]
+
+# logical axis -> ordered mesh-axis candidates
+CANDIDATES = {
+    "vocab": ["model"],
+    "ffn": ["model"],
+    "experts": ["model"],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "embed": ["data"],
+    "embed2": ["model", "data"],
+    "lora": ["model", "data"],
+    "batch": ["data"],
+    "kvseq": ["model"],
+    "state": [],
+    "seq": [],
+    "encseq": [],
+    # head_dim/qk_dim stay unsharded: a param-level head_dim shard forces a
+    # per-layer reshard against the head-padded activation layout and trips
+    # XLA SPMD resharding bugs; non-divisible-head memory is handled by
+    # FSDP (train) and serve-side FSDP for >10B models (steps.py)
+    "head_dim": [],
+    "head_dim2": [],
+    "qk_dim": [],
+    "conv": [],
+    "layers": [],
+    "layers2": [],
+}
+
+
+def spec_for_leaf(
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    batch_axes: Tuple[str, ...] = ("data",),
+) -> P:
+    """Assign mesh axes to one leaf's dims by priority + divisibility."""
+    assert len(shape) == len(axes), (shape, axes)
+    assignment: list = [None] * len(axes)
+    used = set()
+    order = sorted(
+        range(len(axes)),
+        key=lambda i: PRIORITY.index(axes[i]) if axes[i] in PRIORITY else 999,
+    )
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for i in order:
+        name = axes[i]
+        if name is None:
+            continue
+        if name == "embed" and not fsdp:
+            continue
+        if name == "batch":
+            # batch may span multiple mesh axes (pod x data); fall back to
+            # shorter prefixes when the size doesn't divide
+            wanted = [a for a in batch_axes if a in mesh_sizes and a not in used]
+            for k in range(len(wanted), 0, -1):
+                span = wanted[:k]
+                total = int(np.prod([mesh_sizes[a] for a in span]))
+                if shape[i] % total == 0:
+                    assignment[i] = tuple(span) if len(span) > 1 else span[0]
+                    used.update(span)
+                    break
+            continue
+        for cand in CANDIDATES.get(name, []):
+            if cand in used or cand not in mesh_sizes:
+                continue
+            if shape[i] % mesh_sizes[cand] == 0:
+                assignment[i] = cand
+                used.add(cand)
+                break
+    return P(*assignment)
+
+
+def _tree_shardings(spec_tree, axes_tree, mesh, **kw):
+    def one(leaf_spec, leaf_axes):
+        return NamedSharding(
+            mesh, spec_for_leaf(tuple(leaf_spec.shape), tuple(leaf_axes), mesh, **kw)
+        )
+
+    return jax.tree.map(one, spec_tree, axes_tree)
+
+
+def param_shardings(abstract_params, param_axes, mesh, *, fsdp: bool = True):
+    """NamedShardings for the parameter tree (TP over model, FSDP over data)."""
+    return _tree_shardings(abstract_params, param_axes, mesh, fsdp=fsdp)
+
+
+def cache_shardings(cache_spec, cache_axes, mesh, *, batch_axes=("data",)):
+    """Decode/prefill cache shardings (batch->data, kvseq->model)."""
+    return _tree_shardings(cache_spec, cache_axes, mesh, batch_axes=batch_axes)
+
+
+def batch_spec(mesh, batch_size: int, *, include_pod: bool = True) -> P:
+    """PartitionSpec entry for a batch dim of the given size (divisibility-
+    checked; falls back to fewer axes, then replication — long_500k's B=1)."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    wanted = [a for a in (("pod", "data") if include_pod else ("data",)) if a in mesh_sizes]
+    for k in range(len(wanted), 0, -1):
+        span = wanted[:k]
+        if batch_size % int(np.prod([mesh_sizes[a] for a in span])) == 0:
+            return tuple(span) if len(span) > 1 else span[0]
+    return None
+
+
+def input_shardings(input_specs_dict, mesh, *, include_pod: bool = True):
+    """Shard every model input on its leading batch dim."""
+
+    def one(leaf):
+        ndim = len(leaf.shape)
+        if not ndim:
+            return NamedSharding(mesh, P())
+        b = batch_spec(mesh, int(leaf.shape[0]), include_pod=include_pod)
+        return NamedSharding(mesh, P(b, *([None] * (ndim - 1))))
+
+    return {k: one(v) for k, v in input_specs_dict.items()}

@@ -1,0 +1,226 @@
+"""Discrete-event transport simulator — the stochastic oracle.
+
+Event-granular counterpart of ``repro.transport.model``: SYN attempts,
+keepalive probe cycles, AIMD window-by-window transfer with SACK reorder
+buffering and RTO escalation. Seeded numpy RNG; every run yields an event
+trace (the paper's "systematic analysis of connection patterns during
+training rounds", §I) plus the sampled outcome.
+
+Property tests (tests/test_transport.py) assert the analytic model's
+expectations match DES sample means within tolerance across random
+(TcpParams, LinkProfile) draws.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.transport.link import LinkProfile
+from repro.transport.params import TcpParams
+
+
+@dataclass
+class Event:
+    t: float
+    kind: str
+    detail: str = ""
+
+
+@dataclass
+class SimOutcome:
+    success: bool
+    time: float
+    events: List[Event] = field(default_factory=list)
+    reconnects: int = 0
+    bytes_acked: int = 0
+
+
+def _rtt_sample(link: LinkProfile, rng: np.random.Generator) -> float:
+    j = rng.normal(0.0, link.jitter) + rng.normal(0.0, link.jitter)
+    return max(2.0 * link.delay + j, 1e-5)
+
+
+def sim_handshake(tcp: TcpParams, link: LinkProfile, rng: np.random.Generator) -> SimOutcome:
+    budget = tcp.handshake_budget
+    events = [Event(0.0, "SYN", "attempt 0")]
+    for k in range(tcp.tcp_syn_retries + 1):
+        t_send = k * tcp.syn_rto
+        if t_send > budget:
+            break
+        if k > 0:
+            events.append(Event(t_send, "SYN", f"retransmit {k}"))
+        rtt = _rtt_sample(link, rng)
+        delivered = rng.random() >= link.loss and rng.random() >= link.loss
+        if delivered and t_send + rtt <= budget:
+            t_done = t_send + rtt
+            events.append(Event(t_done, "ESTABLISHED", f"attempt {k}"))
+            return SimOutcome(True, t_done, events)
+    events.append(Event(budget, "ETIMEDOUT", "handshake budget exhausted"))
+    return SimOutcome(False, budget, events)
+
+
+def sim_idle(
+    tcp: TcpParams, link: LinkProfile, idle_time: float, rng: np.random.Generator
+) -> Tuple[str, List[Event]]:
+    """Returns (state, events); state in {alive, detected_dead, silent_dead}."""
+    events: List[Event] = []
+    mbox = link.middlebox_timeout
+    if tcp.tcp_keepalive_time >= idle_time:
+        if idle_time > mbox:
+            events.append(Event(mbox, "MBOX_DROP", "silent middlebox reap"))
+            return "silent_dead", events
+        return "alive", events
+
+    t = tcp.tcp_keepalive_time
+    last_refresh = 0.0
+    consecutive = 0
+    while t <= idle_time:
+        rtt = _rtt_sample(link, rng)
+        delivered = rng.random() >= link.loss and rng.random() >= link.loss
+        ok = delivered and rtt <= tcp.tcp_keepalive_intvl
+        events.append(Event(t, "KEEPALIVE", "ack" if ok else "lost"))
+        if t - last_refresh > mbox:
+            events.append(Event(t, "MBOX_DROP", "probe gap exceeded middlebox"))
+            return "silent_dead", events
+        if ok:
+            consecutive = 0
+            last_refresh = t
+        else:
+            consecutive += 1
+            if consecutive >= tcp.tcp_keepalive_probes:
+                events.append(Event(t, "CONN_DEAD", "keepalive declared dead"))
+                return "detected_dead", events
+        t += tcp.tcp_keepalive_intvl
+    if idle_time - last_refresh > mbox:
+        events.append(Event(idle_time, "MBOX_DROP", "tail idle exceeded middlebox"))
+        return "silent_dead", events
+    return "alive", events
+
+
+def sim_transfer(
+    tcp: TcpParams, link: LinkProfile, nbytes: int, rng: np.random.Generator
+) -> SimOutcome:
+    """AIMD window-by-window transfer with reorder-buffer accounting."""
+    events: List[Event] = []
+    segs_total = max(1, math.ceil(nbytes / tcp.mss))
+    wnd_max = max(tcp.window_bytes // tcp.mss, 2)
+    rate_segs_per_rtt_cap = None
+    t = 0.0
+    cwnd = 10.0
+    acked = 0
+    pending_retrans = 0
+    rto = tcp.initial_rto
+    reorder_bytes = 0
+    p = link.loss
+
+    iters = 0
+    while acked < segs_total:
+        iters += 1
+        if iters > 200_000:
+            events.append(Event(t, "ABORT", "iteration cap"))
+            return SimOutcome(False, t, events, bytes_acked=acked * tcp.mss)
+        rtt = _rtt_sample(link, rng)
+        if link.rate_mbps > 0:
+            rate_segs_per_rtt_cap = max(
+                int(link.rate_mbps * 1e6 / 8.0 * rtt / tcp.mss), 1
+            )
+        w = int(min(cwnd, wnd_max, link.queue_limit,
+                    rate_segs_per_rtt_cap or 1e18))
+        w = min(max(w, 1), segs_total - acked + pending_retrans)
+        lost = int(rng.binomial(w, p)) if p > 0 else 0
+        delivered = w - lost
+        t += rtt
+        if delivered == 0:
+            # whole window lost -> RTO
+            t += rto
+            consecutive_rtos = 1
+            while rng.random() < p ** 1 and consecutive_rtos < tcp.tcp_retries2:
+                # retransmission itself lost; escalate
+                rto = min(rto * 2, tcp.max_rto)
+                t += rto
+                consecutive_rtos += 1
+            if consecutive_rtos >= tcp.tcp_retries2:
+                events.append(Event(t, "CONN_DEAD", "tcp_retries2 exhausted"))
+                return SimOutcome(False, t, events, bytes_acked=acked * tcp.mss)
+            events.append(Event(t, "RTO", f"stall {rto:.2f}s"))
+            cwnd = 10.0
+            rto = min(rto * 2, tcp.max_rto)
+            continue
+        rto = tcp.initial_rto
+        # SACK holes: delivered-but-unordered segments occupy the reorder buffer
+        if lost > 0 and tcp.tcp_sack:
+            reorder_bytes += delivered * tcp.mss
+            if reorder_bytes > tcp.tcp_rmem * 48:  # rmem max = 48x default (sysctl triple)
+                events.append(Event(t, "BUFFER_EXHAUSTED", f"{reorder_bytes}B held"))
+                return SimOutcome(False, t, events, bytes_acked=acked * tcp.mss)
+            cwnd = max(cwnd / 2.0, 2.0)
+            pending_retrans = lost
+        else:
+            reorder_bytes = 0
+            pending_retrans = 0
+            cwnd = cwnd + 1.0 if cwnd >= wnd_max / 2 else cwnd * 2.0
+        acked += delivered
+    events.append(Event(t, "TRANSFER_DONE", f"{nbytes}B"))
+    return SimOutcome(True, t, events, bytes_acked=nbytes)
+
+
+def sim_client_round(
+    tcp: TcpParams,
+    link: LinkProfile,
+    *,
+    update_bytes: int,
+    local_train_time: float,
+    rng: np.random.Generator,
+    connected: bool = True,
+    download_bytes: Optional[int] = None,
+) -> SimOutcome:
+    """One full FL client round, event-granular."""
+    download_bytes = update_bytes if download_bytes is None else download_bytes
+    t = 0.0
+    events: List[Event] = []
+    reconnects = 0
+
+    def shift(evts, dt):
+        return [Event(e.t + dt, e.kind, e.detail) for e in evts]
+
+    if not connected:
+        hs = sim_handshake(tcp, link, rng)
+        events += hs.events
+        t += hs.time
+        reconnects += 1
+        if not hs.success:
+            return SimOutcome(False, t, events, reconnects)
+
+    down = sim_transfer(tcp, link, download_bytes, rng)
+    events += shift(down.events, t)
+    t += down.time
+    if not down.success:
+        return SimOutcome(False, t, events, reconnects)
+
+    state, idle_events = sim_idle(tcp, link, local_train_time, rng)
+    events += shift(idle_events, t)
+    t += local_train_time
+    if state != "alive":
+        if state == "silent_dead":
+            stall = min(
+                sum(min(tcp.initial_rto * 2**i, tcp.max_rto) for i in range(6)), 60.0
+            )
+            t += stall
+            events.append(Event(t, "STALL", "discovered dead connection on send"))
+        hs = sim_handshake(tcp, link, rng)
+        events += shift(hs.events, t)
+        t += hs.time
+        reconnects += 1
+        if not hs.success:
+            return SimOutcome(False, t, events, reconnects)
+
+    up = sim_transfer(tcp, link, update_bytes, rng)
+    events += shift(up.events, t)
+    t += up.time
+    if not up.success:
+        return SimOutcome(False, t, events, reconnects)
+    return SimOutcome(True, t, events, reconnects, bytes_acked=update_bytes + download_bytes)

@@ -1,0 +1,10 @@
+from repro.tuning.grid import GridResult, sweep_parameter, tune_three_params
+from repro.tuning.daemon import AdaptiveTuner, ConnectionStats
+
+__all__ = [
+    "sweep_parameter",
+    "tune_three_params",
+    "GridResult",
+    "AdaptiveTuner",
+    "ConnectionStats",
+]

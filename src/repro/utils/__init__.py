@@ -1,0 +1,27 @@
+from repro.utils.pytree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_bytes,
+    tree_weighted_mean,
+    flatten_to_vector,
+    unflatten_from_vector,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_dot",
+    "tree_norm",
+    "tree_size",
+    "tree_bytes",
+    "tree_weighted_mean",
+    "flatten_to_vector",
+    "unflatten_from_vector",
+]

@@ -1,0 +1,101 @@
+"""Pytree arithmetic helpers used across the FL core and optimizers.
+
+All helpers are jit-friendly (pure jnp) and operate leaf-wise on arbitrary
+nested structures of arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    """Leaf-wise a + b."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Leaf-wise a - b."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """Leaf-wise a * s for scalar s."""
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Inner product over all leaves (float32 accumulation)."""
+    parts = jax.tree.leaves(
+        jax.tree.map(
+            lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+        )
+    )
+    return jnp.sum(jnp.stack(parts)) if parts else jnp.float32(0.0)
+
+
+def tree_norm(a):
+    """Global L2 norm over all leaves."""
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(a) -> int:
+    """Total number of elements across all leaves (static)."""
+    return int(sum(np.prod(l.shape, dtype=np.int64) for l in jax.tree.leaves(a)))
+
+
+def tree_bytes(a) -> int:
+    """Total byte size across all leaves (static)."""
+    total = 0
+    for leaf in jax.tree.leaves(a):
+        dt = getattr(leaf, "dtype", None)
+        itemsize = np.dtype(dt).itemsize if dt is not None else 4
+        total += int(np.prod(leaf.shape, dtype=np.int64)) * itemsize
+    return total
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean over a list of pytrees.
+
+    ``weights`` is a 1-D array-like with one weight per tree; normalized
+    internally so callers can pass raw example counts (FedAvg semantics).
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-20)
+
+    def _avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        out = jnp.tensordot(w, stacked, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(_avg, *trees)
+
+
+def flatten_to_vector(tree):
+    """Flatten a pytree of arrays into one 1-D float32 vector.
+
+    Returns (vector, unravel_fn-free metadata) — see unflatten_from_vector.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    vec = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+    meta = (treedef, shapes, dtypes)
+    return vec, meta
+
+
+def unflatten_from_vector(vec, meta):
+    treedef, shapes, dtypes = meta
+    leaves = []
+    offset = 0
+    for shape, dtype in zip(shapes, dtypes):
+        n = int(np.prod(shape, dtype=np.int64))
+        leaves.append(vec[offset : offset + n].reshape(shape).astype(dtype))
+        offset += n
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,123 @@
+"""Attention unit tests: blockwise == full (oracle), SWA, GQA, MLA."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import attention as attn
+
+
+def _qkv(B=2, S=64, Hq=4, Hkv=2, D=16, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("blocks", [(16, 16), (32, 16), (16, 32)])
+def test_blockwise_matches_full(causal, window, blocks):
+    q, k, v = _qkv()
+    bq, bkv = blocks
+    out_f = attn.full_attention(q, k, v, causal=causal, window=window)
+    out_b = attn.blockwise_attention(
+        q, k, v, causal=causal, window=window, block_q=bq, block_kv=bkv
+    )
+    assert jnp.allclose(out_b, out_f, atol=1e-5), float(jnp.max(jnp.abs(out_b - out_f)))
+
+
+def test_gqa_repeat_equivalence():
+    """GQA must equal MHA with explicitly repeated kv heads."""
+    q, k, v = _qkv(Hq=8, Hkv=2)
+    out = attn.full_attention(q, k, v, causal=True)
+    kr = jnp.repeat(k, 4, axis=2)
+    vr = jnp.repeat(v, 4, axis=2)
+    out_mha = attn.full_attention(q, kr, vr, causal=True)
+    assert jnp.allclose(out, out_mha, atol=1e-6)
+
+
+def test_decode_attention_matches_full():
+    """Single-token decode against a cache == last row of full attention."""
+    B, S, H, D = 2, 17, 4, 16
+    q, k, v = _qkv(B=B, S=S, Hq=H, Hkv=H)
+    full = attn.full_attention(q, k, v, causal=True)
+    # cache with S slots; decode the last position
+    Smax = 32
+    k_cache = jnp.zeros((B, Smax, H, D)).at[:, :S].set(k)
+    v_cache = jnp.zeros((B, Smax, H, D)).at[:, :S].set(v)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    out = attn.decode_attention(q[:, S - 1 :], k_cache, v_cache, pos=pos)
+    assert jnp.allclose(out[:, 0], full[:, S - 1], atol=1e-5)
+
+
+def test_swa_ring_cache_decode():
+    """Ring-buffer SWA decode == full attention with window mask."""
+    cfg = get_reduced("mixtral-8x7b").replace(
+        dtype="float32", param_dtype="float32", sliding_window=8
+    )
+    ctx_params = attn.gqa_params.__wrapped__ if hasattr(attn.gqa_params, "__wrapped__") else None
+    from repro.models.base import Ctx
+
+    p = attn.gqa_params(Ctx("init", jax.random.PRNGKey(0), jnp.float32), cfg)
+    B, S = 1, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+
+    # reference: full forward with window mask
+    ref, _ = attn.gqa_forward(cfg, p, x)
+
+    # step-by-step decode through a ring cache of size window
+    cache = {
+        "k": jnp.zeros((B, 8, cfg.n_kv_heads, cfg.resolved_head_dim)),
+        "v": jnp.zeros((B, 8, cfg.n_kv_heads, cfg.resolved_head_dim)),
+        "pos": jnp.zeros((B,), jnp.int32),
+        "kv_pos": jnp.full((B, 8), -1, jnp.int32),
+    }
+    outs = []
+    for t in range(S):
+        o, cache = attn.gqa_forward(cfg, p, x[:, t : t + 1], cache=cache, decode=True)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    assert jnp.allclose(got, ref, atol=1e-4), float(jnp.max(jnp.abs(got - ref)))
+
+
+def test_mla_absorbed_decode_matches_naive():
+    """MLA absorbed decode (c_kv cache) == naive materialized attention."""
+    cfg = get_reduced("deepseek-v2-236b").replace(dtype="float32", param_dtype="float32")
+    from repro.models.base import Ctx
+
+    p = attn.mla_params(Ctx("init", jax.random.PRNGKey(0), jnp.float32), cfg)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    ref, _ = attn.mla_forward(cfg, p, x)
+
+    cache = {
+        "c_kv": jnp.zeros((B, 32, cfg.mla.kv_lora_rank)),
+        "k_pe": jnp.zeros((B, 32, cfg.mla.qk_rope_dim)),
+        "pos": jnp.zeros((B,), jnp.int32),
+    }
+    outs = []
+    c = dict(cache)
+    for t in range(S):
+        o, c = attn.mla_forward(cfg, p, x[:, t : t + 1], cache=c, decode=True)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    assert jnp.allclose(got, ref, atol=1e-4), float(jnp.max(jnp.abs(got - ref)))
+
+
+def test_rope_rotation_property():
+    """RoPE: relative-position property — scores depend only on q-k offset."""
+    from repro.models.base import apply_rope
+
+    D = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    def score(qpos, kpos):
+        qr = apply_rope(q, jnp.array([[qpos]]), 10000.0)
+        kr = apply_rope(k, jnp.array([[kpos]]), 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(5, 3) - score(10, 8)) < 1e-4
+    assert abs(score(5, 3) - score(6, 3)) > 1e-6  # but not position-free

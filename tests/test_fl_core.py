@@ -1,0 +1,213 @@
+"""FL core tests: strategies, quorum semantics, compression feedback,
+end-to-end rounds under chaos (the paper's client-failure experiments in
+miniature)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.chaos import ChaosSchedule, client_failure_schedule, netem
+from repro.compress import get_compressor
+from repro.core import (
+    EdgeClient,
+    FederatedServer,
+    ServerConfig,
+    fedavg,
+    fedopt,
+    fedprox,
+    krum,
+    median,
+    mnist_cnn_task,
+    trimmed_mean,
+)
+from repro.data import make_federated_mnist, synthetic_mnist
+from repro.transport import DEFAULT, LAB
+from repro.utils import tree_sub, tree_weighted_mean
+
+
+def _deltas(n=4, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    return [
+        {"w": jax.random.normal(k, (8, 4)), "b": jax.random.normal(k, (4,))}
+        for k in ks
+    ]
+
+
+def test_fedavg_weighted_mean_exact():
+    deltas = _deltas(3)
+    weights = [1.0, 2.0, 3.0]
+    strat = fedavg()
+    zero = jax.tree.map(jnp.zeros_like, deltas[0])
+    out = strat.aggregate(zero, deltas, weights, 0)
+    expect = tree_weighted_mean(deltas, np.array(weights))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        assert jnp.allclose(a, b, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6),
+    scale=st.floats(0.5, 20.0),
+)
+def test_fedavg_scale_invariance(w, scale):
+    """Property: FedAvg is invariant to rescaling all example counts."""
+    deltas = _deltas(len(w))
+    a = tree_weighted_mean(deltas, np.array(w))
+    b = tree_weighted_mean(deltas, np.array(w) * scale)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert jnp.allclose(x, y, atol=1e-5)
+
+
+def test_fedavg_identical_deltas_fixed_point():
+    """Property: if every client sends delta d, the aggregate is d."""
+    d = _deltas(1)[0]
+    agg = tree_weighted_mean([d, d, d], np.array([1.0, 5.0, 2.0]))
+    for x, y in zip(jax.tree.leaves(agg), jax.tree.leaves(d)):
+        assert jnp.allclose(x, y, atol=1e-6)
+
+
+def test_trimmed_mean_rejects_outlier():
+    deltas = _deltas(5)
+    # poison one client with a huge delta
+    deltas[0] = jax.tree.map(lambda x: x * 1000.0, deltas[0])
+    robust = trimmed_mean(trim_fraction=0.2).aggregate_fn(deltas, [1] * 5)
+    naive = tree_weighted_mean(deltas, np.ones(5))
+    assert float(jnp.max(jnp.abs(robust["w"]))) < float(jnp.max(jnp.abs(naive["w"])))
+
+
+def test_krum_picks_clustered_delta():
+    base = _deltas(1)[0]
+    deltas = [jax.tree.map(lambda x: x + 0.01 * i, base) for i in range(5)]
+    deltas.append(jax.tree.map(lambda x: x + 100.0, base))  # byzantine
+    out = krum(n_byzantine=1).aggregate_fn(deltas, [1] * 6)
+    assert float(jnp.max(jnp.abs(out["w"] - base["w"]))) < 1.0
+
+
+def test_quorum_math():
+    s = fedavg(min_fit=0.1)
+    assert s.quorum(10) == 1  # the paper's Rec #3 setting
+    assert fedavg(min_fit=0.5).quorum(10) == 5
+    assert fedavg(min_fit=1.0).quorum(10) == 10
+
+
+@pytest.mark.parametrize("name,tol", [("topk", 0.25), ("int8", 0.05), ("randk", 0.45)])
+def test_compression_error_feedback_converges(name, tol):
+    """Residual feedback: repeated compression of a CONSTANT delta must
+    deliver the full delta on average (bias -> 0). randk's error feedback
+    lags by ~1/ratio rounds (coordinates wait to be sampled), hence its
+    looser tolerance at n=12 rounds."""
+    comp = get_compressor(name, ratio=0.25)
+    delta = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+    residual = None
+    recovered = jnp.zeros((64,))
+    n = 12
+    for _ in range(n):
+        payload, residual = comp.compress(delta, residual)
+        recovered = recovered + comp.decompress(payload)["w"]
+    mean = recovered / n
+    rel = float(jnp.linalg.norm(mean - delta["w"]) / jnp.linalg.norm(delta["w"]))
+    assert rel < tol, rel
+
+
+def test_compression_wire_bytes_ordering():
+    tree = {"w": jnp.zeros((10000,))}
+    none_b = get_compressor("none").wire_bytes(tree)
+    int8_b = get_compressor("int8").wire_bytes(tree)
+    topk_b = get_compressor("topk", ratio=0.01).wire_bytes(tree)
+    assert topk_b < int8_b < none_b
+
+
+# ---------------------------------------------------------------------------
+# End-to-end rounds (small but real training)
+# ---------------------------------------------------------------------------
+
+
+def _mini_server(strategy, chaos=None, rounds=3, tcp=DEFAULT, stochastic=False, seed=0):
+    shards = make_federated_mnist(6, 64, seed=seed)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    task = mnist_cnn_task()
+    return FederatedServer(
+        task,
+        clients,
+        strategy,
+        tcp=tcp,
+        chaos=chaos or ChaosSchedule(LAB),
+        config=ServerConfig(rounds=rounds, local_steps=2, seed=seed, stochastic=stochastic),
+        eval_data=synthetic_mnist(200, seed=77),
+    )
+
+
+def test_fl_round_runs_and_improves():
+    server = _mini_server(fedavg(min_fit=0.5), rounds=4)
+    hist = server.run()
+    assert hist.completed_rounds == 4
+    assert hist.eval_metrics[-1]["loss"] < 2.40  # better than -ln(1/10)+eps
+
+
+def test_client_failure_tolerated_with_low_min_fit():
+    """Paper Rec #3 / Fig 5: min_fit=10% tolerates heavy client failure."""
+    chaos = ChaosSchedule(LAB).add(client_failure_schedule(6, 0.66, seed=1))
+    ok = _mini_server(fedavg(min_fit=0.1), chaos=chaos, rounds=3).run()
+    assert ok.completed_rounds == 3
+
+    strict = _mini_server(fedavg(min_fit=0.9), chaos=chaos, rounds=3).run()
+    assert strict.completed_rounds == 0  # quorum never met
+
+
+def test_partition_blocks_training():
+    from repro.chaos import internet_shutdown
+
+    chaos = ChaosSchedule(LAB).add(internet_shutdown(0.0, float("inf")))
+    hist = _mini_server(fedavg(min_fit=0.5), chaos=chaos, rounds=3).run()
+    assert hist.completed_rounds == 0
+
+
+def test_netem_latency_slows_rounds():
+    slow_chaos = ChaosSchedule(LAB).add(netem(0, float("inf"), delay=1.0))
+    fast = _mini_server(fedavg(), rounds=2, seed=3).run()
+    slow = _mini_server(fedavg(), chaos=slow_chaos, rounds=2, seed=3).run()
+    assert slow.total_time > fast.total_time * 1.5
+
+
+def test_stochastic_transport_mode():
+    hist = _mini_server(fedavg(min_fit=0.5), rounds=2, stochastic=True).run()
+    assert hist.completed_rounds == 2
+
+
+@pytest.mark.parametrize("make", [fedprox, lambda: fedopt("adam"), median])
+def test_alternative_strategies_run(make):
+    hist = _mini_server(make(), rounds=2).run()
+    assert hist.completed_rounds == 2
+
+
+def test_async_mode_and_straggler_overprovision():
+    """Async staleness-weighted aggregation + over-provisioned cohorts run
+    and still learn; the straggler-trimmed round closes at the fast quorum."""
+    from repro.core import ServerConfig
+
+    shards = make_federated_mnist(8, 64, seed=4)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    # make two clients slow (Pi-class throttled)
+    clients[0].compute_rate = 0.2
+    clients[1].compute_rate = 0.2
+    server = FederatedServer(
+        mnist_cnn_task(),
+        clients,
+        fedavg(min_fit=0.25),
+        tcp=DEFAULT,
+        chaos=ChaosSchedule(LAB),
+        config=ServerConfig(
+            rounds=3, local_steps=2, seed=4,
+            over_provision=1.5, quorum_close_fraction=0.75,
+            async_mode=True, staleness_alpha=0.5,
+        ),
+        eval_data=synthetic_mnist(150, seed=5),
+    )
+    hist = server.run()
+    assert hist.completed_rounds == 3
+    assert hist.eval_metrics[-1]["loss"] < 2.35
+    # trimmed rounds deliver fewer than they select
+    rec = hist.rounds[0]
+    assert rec.delivered <= rec.selected

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting output shapes + no NaNs, and prefill->decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import f32, make_lm_batch
+from repro.configs import GRID_ARCHS, get_config, get_reduced
+from repro.models import Model
+
+ARCHS = GRID_ARCHS
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_loss(arch):
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_lm_batch(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_no_nans(arch):
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_lm_batch(cfg)
+
+    @jax.jit
+    def step(p, b):
+        g = jax.grad(lambda pp: model.loss(pp, b)[0])(p)
+        return jax.tree.map(lambda x, gg: x - 0.01 * gg.astype(x.dtype), p, g)
+
+    new_params = step(params, batch)
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), f"{arch}: NaN in params"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_shapes(arch):
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_lm_batch(cfg)
+    pre = {k: v for k, v in batch.items() if k in ("tokens", "patch_embed", "frames")}
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, 64))(params, pre)
+    assert logits.shape == (2, cfg.padded_vocab)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache, tok)
+    assert logits2.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "rwkv6-1.6b", "deepseek-v2-236b", "zamba2-7b", "mixtral-8x7b"])
+def test_decode_matches_prefill(arch):
+    """prefill(S-1) + decode(1 token) == prefill(S) last-position logits."""
+    import dataclasses
+
+    cfg = f32(get_reduced(arch))
+    if cfg.moe is not None:
+        # drop-free capacity: MoE token-dropping legitimately differs between
+        # a T-token prefill and a 1-token decode (capacity is per call)
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+
+    full_logits, _ = jax.jit(lambda p, b: model.prefill(p, b, 32))(
+        params, {"tokens": tokens}
+    )
+    short_logits, cache = jax.jit(lambda p, b: model.prefill(p, b, 32))(
+        params, {"tokens": tokens[:, : S - 1]}
+    )
+    step_logits, _ = jax.jit(model.decode_step)(params, cache, tokens[:, S - 1 :])
+    assert jnp.allclose(step_logits, full_logits, atol=2e-2, rtol=2e-2), (
+        f"{arch}: decode diverges from prefill "
+        f"(max err {float(jnp.max(jnp.abs(step_logits - full_logits))):.4f})"
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates(arch):
+    """The exact published config is constructible and counts params in the
+    right ballpark (no allocation — just arithmetic + abstract eval)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "rwkv6-1.6b": (1.2e9, 2.4e9),
+        "phi-3-vision-4.2b": (3.3e9, 5.2e9),
+        "phi3-medium-14b": (11e9, 16e9),
+        "starcoder2-3b": (2.4e9, 4e9),
+        "qwen3-8b": (6.5e9, 10e9),
+        "minitron-8b": (7e9, 10.5e9),
+        "deepseek-v2-236b": (2e11, 2.6e11),
+        "mixtral-8x7b": (4e10, 5.2e10),
+        "whisper-base": (5e7, 1.6e8),
+        "zamba2-7b": (5e9, 9e9),
+    }[arch]
+    assert expected[0] <= n <= expected[1], f"{arch}: {n:.3e} params out of range"
+    # abstract init matches real init structure
+    model = Model(get_reduced(arch))
+    abs_p = model.abstract_params()
+    real_p = model.init(jax.random.PRNGKey(0))
+    assert jax.tree.structure(abs_p) == jax.tree.structure(real_p)
+    for a, r in zip(jax.tree.leaves(abs_p), jax.tree.leaves(real_p)):
+        assert a.shape == r.shape and a.dtype == r.dtype
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral-8x7b")
+    total = cfg.param_count()
+    active = cfg.param_count(active_only=True)
+    assert active < total * 0.45  # top-2 of 8 experts + attention
+    ds = get_config("deepseek-v2-236b")
+    assert ds.param_count(active_only=True) < ds.param_count() * 0.15

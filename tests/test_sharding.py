@@ -1,0 +1,107 @@
+"""Sharding rule engine tests (no multi-device mesh needed: rules are pure
+functions over shapes + axis names; a 1x1 host mesh carries the names)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import spec_for_leaf
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + devices.shape is all the rules use."""
+
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes.keys())
+        self.devices = np.empty(tuple(sizes.values()), dtype=object)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD_MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_embedding_2d_sharded():
+    spec = spec_for_leaf((102400, 5120), ("vocab", "embed"), MESH)
+    assert spec == P("model", "data")
+
+
+def test_attention_weights():
+    # qwen3 wq [d, 32, 128]: embed->data, heads->model
+    spec = spec_for_leaf((4096, 32, 128), ("embed", "heads", "head_dim"), MESH)
+    assert spec == P("data", "model", None)
+
+
+def test_kv_heads_fallback_replicated():
+    # starcoder2 kv=2: not divisible by 16 -> replicated
+    spec = spec_for_leaf((3072, 2, 128), ("embed", "kv_heads", "head_dim"), MESH)
+    assert spec == P("data", None, None)
+
+
+def test_q_heads_fallback_replicated():
+    # phi3-medium 40 heads % 16 != 0 -> replicated (documented perf lever)
+    spec = spec_for_leaf((5120, 40, 128), ("embed", "heads", "head_dim"), MESH)
+    assert spec == P("data", None, None)
+
+
+def test_priority_heads_beat_lora():
+    # MLA w_uq [lora, heads, qk]: heads claims model first; lora falls to data
+    spec = spec_for_leaf((1536, 128, 192), ("lora", "heads", "qk_dim"), MESH)
+    assert spec == P("data", "model", None)
+
+
+def test_experts_sharded():
+    spec = spec_for_leaf((160, 5120, 1536), ("experts", "embed", "ffn"), MESH)
+    # experts claim model (EP); ffn can't double-claim it; embed takes data
+    assert spec == P("model", "data", None)
+
+
+def test_no_fsdp_disables_embed():
+    spec = spec_for_leaf((4096, 12288), ("embed", "ffn"), MESH, fsdp=False)
+    assert spec == P(None, "model")
+
+
+def test_decode_cache_layout():
+    # [L, B, Skv, kv, hd]: batch->data, kvseq->model
+    spec = spec_for_leaf(
+        (36, 128, 32768, 8, 128),
+        ("layers", "batch", "kvseq", "kv_heads", "head_dim"),
+        MESH,
+    )
+    assert spec == P(None, "data", "model", None, None)
+
+
+def test_tiny_batch_replicates():
+    # long_500k: B=1 cannot shard
+    spec = spec_for_leaf(
+        (24, 1, 32, 64, 64),
+        ("layers", "batch", "heads", "head_dim", "head_dim2"),
+        MESH,
+    )
+    assert spec == P(None, None, "model", None, None)
+
+
+def test_batch_spans_pod_and_data():
+    spec = spec_for_leaf(
+        (256, 4096), ("batch", "seq"), POD_MESH, batch_axes=("pod", "data")
+    )
+    assert spec == P(("pod", "data"), None)
+    # batch=2 divides pod(2) but not pod*data(32): falls back to fewer axes
+    spec2 = spec_for_leaf(
+        (2, 4096), ("batch", "seq"), POD_MESH, batch_axes=("pod", "data")
+    )
+    assert spec2 in (P(("pod",), None), P("pod", None), P(None, None))
+
+
+def test_input_shardings_batch_only():
+    from repro.sharding import input_shardings
+    import jax.numpy as jnp
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((16, 128), jnp.int32),
+        "scalar": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    out = input_shardings(specs, mesh)
+    assert out["tokens"].spec == P("data", None)
+    assert out["scalar"].spec == P()

