@@ -22,6 +22,20 @@ ROUNDS = 8
 LOCAL_STEPS = 4
 EXAMPLES_PER_CLIENT = 200
 
+_TASK = None
+
+
+def _shared_task():
+    """One task instance for the whole sweep: its jit caches (batched
+    cohort programs, per-client step) are closures on the task, so sharing
+    it amortizes compilation across every sweep point."""
+    global _TASK
+    if _TASK is None:
+        from repro.core import mnist_cnn_task
+
+        _TASK = mnist_cnn_task()
+    return _TASK
+
 
 def run_fl_experiment(
     *,
@@ -32,18 +46,20 @@ def run_fl_experiment(
     rounds: int = ROUNDS,
     seed: int = 0,
     local_steps: int = LOCAL_STEPS,
+    batched: bool = True,
 ) -> Dict[str, float]:
     shards = make_federated_mnist(N_CLIENTS, EXAMPLES_PER_CLIENT, seed=seed)
     clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
-    from repro.core import mnist_cnn_task
 
     server = FederatedServer(
-        mnist_cnn_task(),
+        _shared_task(),
         clients,
         fedavg(min_fit=min_fit),
         tcp=tcp,
         chaos=chaos or ChaosSchedule(link),
-        config=ServerConfig(rounds=rounds, local_steps=local_steps, seed=seed),
+        config=ServerConfig(
+            rounds=rounds, local_steps=local_steps, seed=seed, batched=batched
+        ),
         eval_data=synthetic_mnist(400, seed=4242),
     )
     hist = server.run()

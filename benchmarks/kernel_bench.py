@@ -14,7 +14,10 @@ from repro.kernels import ref
 
 
 def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    # single warmup invocation: jax.block_until_ready handles tuples/pytrees,
+    # so the old double-call (isinstance probe + discarded run) is gone and
+    # the first measured window no longer overlaps a stray async dispatch.
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(n):
         jax.block_until_ready(fn(*args))

@@ -1,0 +1,144 @@
+"""Round-engine benchmark: batched cohort engine vs the seed sequential path.
+
+Runs the same 32-client MNIST FL experiment twice — once with the seed's
+per-client Python loop (``batched=False``) and once with the vectorized
+cohort engine (``batched=True``: one fused local-SGD dispatch per round,
+stacked-delta aggregation, vectorized transport draws) — at a fixed seed,
+and emits a BENCH json line with wall times, the speedup, and the
+semantic-parity checks (completed_rounds equal; final accuracy within
+1e-3).
+
+Methodology: both engines share one task instance (so jit caches are
+shared and warm), a throwaway warmup run precedes timing (steady-state
+sweep throughput is what the paper's characterization cost is made of),
+runs are interleaved and the median of ``--reps`` wall times is reported
+(the CI box has bursty background load). Eval runs once at the end so the
+comparison isolates the round hot path.
+
+``--fast`` shrinks to 8 clients x 3 rounds for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.chaos import ChaosSchedule
+from repro.core import EdgeClient, FederatedServer, ServerConfig, fedavg, mnist_cnn_task
+from repro.data import make_federated_mnist, synthetic_mnist
+from repro.transport import DEFAULT, LAB
+
+
+def _build_server(task, shards_seed, *, n_clients, rounds, local_steps, seed, batched):
+    shards = make_federated_mnist(n_clients, 320, seed=shards_seed)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    return FederatedServer(
+        task,
+        clients,
+        fedavg(min_fit=0.5),
+        tcp=DEFAULT,
+        chaos=ChaosSchedule(LAB),
+        config=ServerConfig(
+            rounds=rounds,
+            local_steps=local_steps,
+            seed=seed,
+            batched=batched,
+            eval_every=rounds,  # eval once at the end: time the round hot path
+        ),
+        eval_data=synthetic_mnist(2000, seed=4242),
+    )
+
+
+def run_bench(
+    *,
+    n_clients: int = 32,
+    rounds: int = 10,
+    local_steps: int = 10,
+    seed: int = 0,
+    reps: int = 3,
+    fast: bool = False,
+):
+    if fast:
+        n_clients, rounds, local_steps, reps = 8, 3, 4, 1
+    reps = max(int(reps), 1)
+
+    # one shared task => shared jit caches across all servers below
+    task = mnist_cnn_task()
+
+    def timed_run(batched):
+        srv = _build_server(
+            task, seed, n_clients=n_clients, rounds=rounds,
+            local_steps=local_steps, seed=seed, batched=batched,
+        )
+        t0 = time.time()
+        hist = srv.run()
+        return time.time() - t0, hist
+
+    # warmup: compile both engines' programs at the bench shapes
+    _build_server(task, seed, n_clients=n_clients, rounds=1,
+                  local_steps=local_steps, seed=seed, batched=False).run()
+    _build_server(task, seed, n_clients=n_clients, rounds=1,
+                  local_steps=local_steps, seed=seed, batched=True).run()
+
+    seq_times, bat_times = [], []
+    hist_seq = hist_bat = None
+    for _ in range(reps):  # interleaved against bursty background load
+        dt, hist_bat = timed_run(batched=True)
+        bat_times.append(dt)
+        dt, hist_seq = timed_run(batched=False)
+        seq_times.append(dt)
+
+    seq_s = float(np.median(seq_times))
+    bat_s = float(np.median(bat_times))
+    s, b = hist_seq.summary(), hist_bat.summary()
+    acc_diff = abs(s["final_accuracy"] - b["final_accuracy"])
+    result = {
+        "bench": "round_engine",
+        "config": {
+            "n_clients": n_clients, "rounds": rounds,
+            "local_steps": local_steps, "seed": seed, "reps": reps,
+        },
+        "sequential_s": round(seq_s, 3),
+        "batched_s": round(bat_s, 3),
+        "speedup": round(seq_s / bat_s, 3),
+        "sequential_times_s": [round(t, 3) for t in seq_times],
+        "batched_times_s": [round(t, 3) for t in bat_times],
+        "seq_completed_rounds": s["completed_rounds"],
+        "bat_completed_rounds": b["completed_rounds"],
+        "seq_final_accuracy": round(s["final_accuracy"], 5),
+        "bat_final_accuracy": round(b["final_accuracy"], 5),
+        "agree_completed_rounds": s["completed_rounds"] == b["completed_rounds"],
+        "agree_total_time": abs(s["total_time_s"] - b["total_time_s"]) < 1e-6,
+        "final_accuracy_diff": round(acc_diff, 6),
+        "accuracy_within_tol": acc_diff <= 1e-3,
+    }
+    print("BENCH " + json.dumps(result))
+    return result
+
+
+def main(fast: bool = False):
+    result = run_bench(fast=fast)
+    ok = result["agree_completed_rounds"] and result["accuracy_within_tol"]
+    if not ok:
+        print("round_engine_bench: PARITY FAILURE", file=sys.stderr)
+        raise SystemExit(1)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=10)
+    args = ap.parse_args()
+    if args.fast:
+        main(fast=True)
+    else:
+        result = run_bench(rounds=args.rounds, local_steps=args.local_steps, reps=args.reps)
+        if not (result["agree_completed_rounds"] and result["accuracy_within_tol"]):
+            raise SystemExit(1)

@@ -28,6 +28,7 @@ def main() -> None:
         fig5_client_failure,
         fig678_tcp_params,
         kernel_bench,
+        round_engine_bench,
         table3_boundaries,
         tuned_vs_default,
     )
@@ -42,6 +43,7 @@ def main() -> None:
         ("tuned_vs_default", tuned_vs_default.main),  # SecV validation
         ("adaptive_daemon", adaptive_daemon.main),    # beyond-paper (SecVI)
         ("kernel_bench", kernel_bench.main),
+        ("round_engine_bench", round_engine_bench.main),
     ]
 
     summary = []

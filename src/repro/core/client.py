@@ -11,17 +11,23 @@ configs implement the same interface, so every benchmark can swap payloads.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import ClientDataset
-from repro.models.cnn import cnn_apply, cnn_init, cnn_loss
-from repro.optim import apply_updates, clip_by_global_norm, sgd
-from repro.utils import tree_sub
+from repro.models.cnn import cnn_apply, cnn_init, cnn_loss, cnn_loss_stacked
+from repro.optim import (
+    apply_updates,
+    clip_by_global_norm,
+    clip_by_global_norm_stacked,
+    sgd,
+)
+from repro.utils import tree_broadcast_leading, tree_sub
 
 
 @dataclass
@@ -33,6 +39,113 @@ class LocalTask:
     local_fit: Callable  # (params, client, steps, rng, prox_mu) -> (delta, n_examples, metrics)
     evaluate: Callable  # (params, data) -> metrics
     update_bytes: int  # uncompressed wire size of one update
+    # Cohort-batched twin of local_fit (the vectorized engine's hot path):
+    # (params, clients, steps, rng, prox_mu) ->
+    #     (stacked_delta [C,...], n_examples [C], metrics [C]).
+    # Must consume ``rng`` draw-for-draw identically to calling local_fit on
+    # each client in order, so batched/sequential runs share one RNG stream.
+    # None => the server falls back to the sequential per-client loop.
+    batched_local_fit: Optional[Callable] = None
+
+
+_UNROLL_LIMIT = 16  # local steps fused into one program before falling back
+
+
+def _batched_sgd_runner(cohort_loss_fn, lr: float):
+    """jit'd cohort runner: the whole cohort's local SGD as stacked tensor
+    programs — one dispatch per round, no per-client Python loop.
+
+    ``cohort_loss_fn(stacked_params, batch)`` must return per-client losses
+    [C] plus a dict of per-client metric arrays, where every params leaf and
+    batch leaf carries a leading client axis C. Summing the per-client
+    losses before differentiation yields each client's own gradient in its
+    slice (clients share no parameters), so one value_and_grad drives C
+    independent SGD trajectories. Clipping is per-client
+    (clip_by_global_norm_stacked); the momentum update is leaf-wise and
+    vectorizes over the stacked axis unchanged.
+
+    Lowering notes (CPU-measured, see benchmarks/round_engine_bench.py):
+    jax.lax.scan over steps and vmap'd lax.conv both lower catastrophically
+    (batched-kernel convs become grouped convs; scan pins them inside a
+    while loop), so local steps are UNROLLED at trace time into one fused
+    program — XLA then aliases the params/momentum buffers across steps
+    instead of round-tripping ~100 MB per step through fresh allocations.
+    Beyond _UNROLL_LIMIT steps a donated per-step jit keeps the same buffer
+    reuse with bounded compile time.
+    """
+    opt = sgd(lr, momentum=0.9)
+
+    def step_body(stacked, opt_state, batch, anchor, mu, use_prox):
+        def total_loss(ps):
+            losses, metrics = cohort_loss_fn(ps, batch)
+            if use_prox:
+                prox = sum(
+                    jnp.sum(
+                        jnp.square(
+                            l.astype(jnp.float32) - a.astype(jnp.float32)[None]
+                        ),
+                        axis=tuple(range(1, l.ndim)),
+                    )
+                    for l, a in zip(jax.tree.leaves(ps), jax.tree.leaves(anchor))
+                )
+                losses = losses + 0.5 * mu * prox
+            return jnp.sum(losses), metrics
+
+        (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(stacked)
+        grads, _ = clip_by_global_norm_stacked(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, stacked, jnp.int32(0))
+        return apply_updates(stacked, updates), opt_state, metrics
+
+    @functools.partial(jax.jit, static_argnames=("use_prox", "steps"))
+    def fit_fused(anchor, batches, mu, use_prox, steps):
+        c = jax.tree.leaves(batches)[0].shape[0]
+        stacked = tree_broadcast_leading(anchor, c)
+        opt_state = opt.init(stacked)
+        metrics = {}
+        for s in range(steps):
+            batch = jax.tree.map(lambda l: l[:, s], batches)
+            stacked, opt_state, metrics = step_body(
+                stacked, opt_state, batch, anchor, mu, use_prox
+            )
+        delta = jax.tree.map(lambda sp, a: sp - a[None], stacked, anchor)
+        return delta, metrics
+
+    @functools.partial(
+        jax.jit, static_argnames=("use_prox",), donate_argnums=(0, 1)
+    )
+    def step_donated(stacked, opt_state, batch, anchor, mu, use_prox):
+        return step_body(stacked, opt_state, batch, anchor, mu, use_prox)
+
+    @functools.partial(jax.jit, static_argnames=("c",))
+    def init_state(anchor, c):
+        stacked = tree_broadcast_leading(anchor, c)
+        return stacked, opt.init(stacked)
+
+    @jax.jit
+    def finalize(stacked, anchor):
+        return jax.tree.map(lambda sp, a: sp - a[None], stacked, anchor)
+
+    def run_cohort(anchor, batches, mu, use_prox):
+        # batches: pytree with leaves [C, steps, ...]
+        leaves = jax.tree.leaves(batches)
+        c, steps = leaves[0].shape[:2]
+        if steps <= _UNROLL_LIMIT:
+            return fit_fused(anchor, batches, mu, use_prox, steps)
+        stacked, opt_state = init_state(anchor, c)
+        metrics = {}
+        for s in range(steps):
+            batch = jax.tree.map(lambda l: l[:, s], batches)
+            stacked, opt_state, metrics = step_donated(
+                stacked, opt_state, batch, anchor, mu, use_prox
+            )
+        return finalize(stacked, anchor), metrics
+
+    return run_cohort
+
+
+def _unstack_metrics(stacked: Dict[str, Any], n: int) -> List[Dict[str, float]]:
+    host = {k: np.asarray(v) for k, v in stacked.items()}  # one sync per metric
+    return [{k: float(v[i]) for k, v in host.items()} for i in range(n)]
 
 
 def _sgd_local_fit(loss_fn, lr: float, batch_size: int):
@@ -74,6 +187,34 @@ def _sgd_local_fit(loss_fn, lr: float, batch_size: int):
     return fit
 
 
+def _sgd_batched_local_fit(cohort_loss_fn, lr: float, batch_size: int):
+    runner = _batched_sgd_runner(cohort_loss_fn, lr)
+
+    def fit_cohort(
+        params,
+        clients: List["EdgeClient"],
+        steps: int,
+        rng: np.random.Generator,
+        prox_mu: float,
+    ):
+        # batch plans drawn per client IN ORDER: same rng stream as the
+        # sequential path pulling `steps` batches per client.
+        plans = [c.dataset.batch_indices(batch_size, steps, rng=rng) for c in clients]
+        batches = {
+            "images": jnp.asarray(
+                np.stack([c.dataset.images[p] for c, p in zip(clients, plans)])
+            ),
+            "labels": jnp.asarray(
+                np.stack([c.dataset.labels[p] for c, p in zip(clients, plans)])
+            ),
+        }
+        deltas, last = runner(params, batches, jnp.float32(prox_mu), prox_mu > 0)
+        n_examples = [steps * batch_size] * len(clients)
+        return deltas, n_examples, _unstack_metrics(last, len(clients))
+
+    return fit_cohort
+
+
 def mnist_cnn_task(lr: float = 0.05, batch_size: int = 32) -> LocalTask:
     """The paper's workload: MNIST CNN, ~1.6 MB params -> ~3.2 MB update
     (float32 down+up per round ~= the paper's 3 MB/round/10-client figure)."""
@@ -98,6 +239,7 @@ def mnist_cnn_task(lr: float = 0.05, batch_size: int = 32) -> LocalTask:
         local_fit=_sgd_local_fit(cnn_loss, lr, batch_size),
         evaluate=evaluate,
         update_bytes=nbytes,
+        batched_local_fit=_sgd_batched_local_fit(cnn_loss_stacked, lr, batch_size),
     )
 
 
@@ -144,9 +286,40 @@ def lm_task(cfg, lr: float = 1e-3, batch_size: int = 4, seq: int = 64) -> LocalT
         loss, metrics = jax.jit(loss_fn)(params, batch)
         return {k: float(v) for k, v in metrics.items()}
 
+    def cohort_loss(ps, batch):
+        # LM losses are matmul-dominated, so a plain vmap (one step, no
+        # scan) lowers to batched GEMMs and stays fast.
+        losses, metrics = jax.vmap(loss_fn)(ps, batch)
+        return losses, metrics
+
+    runner = _batched_sgd_runner(cohort_loss, lr)
+
+    def fit_cohort(params, clients, steps, rng, prox_mu):
+        # same seed draws, same order as the sequential fit loop
+        per_client = []
+        for c in clients:
+            bs = [
+                token_batch_for(
+                    cfg, batch=batch_size, seq=seq,
+                    seed=int(rng.integers(0, 2**31)), client_id=c.client_id,
+                )
+                for _ in range(steps)
+            ]
+            per_client.append({k: np.stack([b[k] for b in bs]) for k in bs[0]})
+        batches = {
+            k: jnp.asarray(np.stack([pc[k] for pc in per_client]))
+            for k in per_client[0]
+        }
+        deltas, last = runner(params, batches, jnp.float32(0.0), False)
+        n_examples = [steps * batch_size] * len(clients)
+        return deltas, n_examples, _unstack_metrics(last, len(clients))
+
     params_t = model.abstract_params()
     nbytes = sum(int(np.prod(p.shape)) * 4 for p in jax.tree.leaves(params_t))
-    return LocalTask(f"lm_{cfg.name}", model.init, fit, evaluate, nbytes)
+    return LocalTask(
+        f"lm_{cfg.name}", model.init, fit, evaluate, nbytes,
+        batched_local_fit=fit_cohort,
+    )
 
 
 @dataclass

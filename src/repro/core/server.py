@@ -36,7 +36,8 @@ from repro.compress import Compressor, none_compressor
 from repro.core.client import EdgeClient, LocalTask
 from repro.core.strategy import Strategy
 from repro.transport import LinkProfile, TcpParams, client_round as analytic_round
-from repro.transport.des import sim_client_round
+from repro.transport.des import sim_client_round, sim_cohort_round
+from repro.utils import tree_stack, tree_unstack
 
 
 @dataclass
@@ -106,6 +107,15 @@ class ServerConfig:
     # arrival order, weighted by staleness^-alpha
     async_mode: bool = False
     staleness_alpha: float = 0.5
+    # batched cohort engine: vectorized transport sampling, one fused
+    # local-training dispatch for the whole cohort, and kernel-backed
+    # stacked-delta aggregation. In the default analytic transport mode it
+    # is RNG-stream-compatible with the sequential engine: same seed =>
+    # same cohort/transport outcomes and (numerically equivalent) training
+    # trajectory. With stochastic=True the cohort MC samples the same
+    # distributions but with a different draw order, so the two engines
+    # are distribution-equivalent, not draw-for-draw identical.
+    batched: bool = False
 
 
 class FederatedServer:
@@ -162,6 +172,55 @@ class FederatedServer:
         return completed, t, out.reconnects
 
     # ------------------------------------------------------------------
+    def _cohort_transport(self, cohort: List[EdgeClient], t_now: float, payload_bytes: int):
+        """Vectorized transport for the whole cohort.
+
+        Returns (completed [k] bool, time [k], reconnects [k]). In analytic
+        mode the completion Bernoullis are drawn as one batch — numpy
+        Generators produce the identical stream for ``rng.random(k)`` and k
+        scalar draws, so outcomes match the sequential per-client loop
+        draw-for-draw at equal seed.
+        """
+        cfg = self.config
+        links = [
+            c.link_override if c.link_override is not None
+            else self.chaos.link_at(t_now, c.client_id)
+            for c in cohort
+        ]
+        local_times = np.array(
+            [cfg.local_steps * c.step_time(cfg.base_step_cost) for c in cohort]
+        )
+        if cfg.stochastic:
+            out = sim_cohort_round(
+                self.tcp,
+                links,
+                update_bytes=payload_bytes,
+                local_train_times=local_times,
+                rng=self.rng,
+                connected=np.array([c.connected for c in cohort], bool),
+            )
+            return out.success, out.time, out.reconnects.astype(float)
+        outs = [
+            analytic_round(
+                self.tcp,
+                link,
+                update_bytes=payload_bytes,
+                local_train_time=lt,
+                connected=c.connected,
+            )
+            for c, link, lt in zip(cohort, links, local_times)
+        ]
+        p = np.array([o.p_complete for o in outs])
+        completed = self.rng.random(len(cohort)) < p
+        times = np.array(
+            [
+                o.expected_time if math.isfinite(o.expected_time) else cfg.round_deadline
+                for o in outs
+            ]
+        )
+        return completed, times, np.array([o.reconnects for o in outs])
+
+    # ------------------------------------------------------------------
     def run(self) -> History:
         cfg = self.config
         t = 0.0
@@ -192,16 +251,24 @@ class FederatedServer:
 
             deliveries = []
             payload_bytes = self.compressor.wire_bytes(self.global_params)
-            for client in cohort:
-                link = self.chaos.link_at(t, client.client_id)
-                if client.link_override is not None:
-                    link = client.link_override
-                local_time = cfg.local_steps * client.step_time(cfg.base_step_cost)
-                done, ct, rc = self._client_transport(client, link, local_time, payload_bytes)
-                record.reconnects += rc
-                client.connected = done  # failed exchange leaves conn dead
-                if done and ct <= cfg.round_deadline:
-                    deliveries.append((client, ct))
+            if cfg.batched:
+                completed, ctimes, recon = self._cohort_transport(cohort, t, payload_bytes)
+                record.reconnects += float(np.sum(recon))
+                for client, done, ct in zip(cohort, completed, ctimes):
+                    client.connected = bool(done)  # failed exchange leaves conn dead
+                    if done and ct <= cfg.round_deadline:
+                        deliveries.append((client, float(ct)))
+            else:
+                for client in cohort:
+                    link = self.chaos.link_at(t, client.client_id)
+                    if client.link_override is not None:
+                        link = client.link_override
+                    local_time = cfg.local_steps * client.step_time(cfg.base_step_cost)
+                    done, ct, rc = self._client_transport(client, link, local_time, payload_bytes)
+                    record.reconnects += rc
+                    client.connected = done  # failed exchange leaves conn dead
+                    if done and ct <= cfg.round_deadline:
+                        deliveries.append((client, ct))
 
             # straggler mitigation: close the round once the fastest
             # quorum_close_fraction of the over-provisioned cohort arrived
@@ -223,28 +290,59 @@ class FederatedServer:
             consecutive_failures = 0
 
             # real local training only for delivering clients
-            deltas, weights, arrivals = [], [], []
-            for client, ct in deliveries:
-                delta, n_ex, m = self.task.local_fit(
+            dclients = [client for client, _ in deliveries]
+            arrivals = [ct for _, ct in deliveries]
+            stacked = None  # stacked deltas [C, ...] when the batched fit ran
+            deltas: List[Any] = []
+            if cfg.batched and self.task.batched_local_fit is not None:
+                # one vmapped dispatch for the whole cohort's local SGD
+                stacked, weights, per_metrics = self.task.batched_local_fit(
                     self.global_params,
-                    client,
+                    dclients,
                     cfg.local_steps,
                     self.rng,
                     self.strategy.prox_mu,
                 )
-                payload, client.residual = self.compressor.compress(delta, client.residual)
-                delta = self.compressor.decompress(payload)
-                deltas.append(delta)
-                weights.append(n_ex)
-                arrivals.append(ct)
+                weights = list(weights)
+            else:
+                weights, per_metrics = [], []
+                for client in dclients:
+                    delta, n_ex, m = self.task.local_fit(
+                        self.global_params,
+                        client,
+                        cfg.local_steps,
+                        self.rng,
+                        self.strategy.prox_mu,
+                    )
+                    deltas.append(delta)
+                    weights.append(n_ex)
+                    per_metrics.append(m)
+
+            # compression: error feedback is per-client state, so any real
+            # compressor unstacks the cohort; the wire-identity "none"
+            # compressor keeps the stacked hot path intact.
+            if self.compressor.name != "none":
+                if stacked is not None:
+                    deltas = tree_unstack(stacked)
+                    stacked = None
+                compressed = []
+                for client, delta in zip(dclients, deltas):
+                    payload, client.residual = self.compressor.compress(delta, client.residual)
+                    compressed.append(self.compressor.decompress(payload))
+                deltas = compressed
+
+            for client, m in zip(dclients, per_metrics):
                 client.rounds_participated += 1
-                client.bytes_sent += self.compressor.wire_bytes(delta)
+                client.bytes_sent += payload_bytes
                 record.metrics.update({f"client_{client.client_id}_{k}": v for k, v in m.items()})
 
             if cfg.async_mode:
                 # arrival-ordered asynchronous application (paper SecII):
                 # each update lands as it arrives, down-weighted by its
                 # staleness relative to the round's first arrival
+                if stacked is not None:
+                    deltas = tree_unstack(stacked)
+                    stacked = None
                 order = np.argsort(arrivals)
                 t0_arr = arrivals[order[0]]
                 for j in order:
@@ -254,6 +352,15 @@ class FederatedServer:
                     self.global_params = self.strategy.aggregate(
                         self.global_params, [upd], [weights[j]], rnd
                     )
+            elif cfg.batched:
+                # stacked-delta fast path: kernel-backed reduction (falls
+                # back to the list path inside aggregate_stacked when the
+                # strategy has no stacked twin)
+                if stacked is None:
+                    stacked = tree_stack(deltas)
+                self.global_params = self.strategy.aggregate_stacked(
+                    self.global_params, stacked, weights, rnd
+                )
             else:
                 self.global_params = self.strategy.aggregate(
                     self.global_params, deltas, weights, rnd

@@ -33,6 +33,31 @@ class ClientDataset:
                 idx = order[i : i + batch_size]
                 yield {"images": self.images[idx], "labels": self.labels[idx]}
 
+    def batch_indices(
+        self, batch_size: int, steps: int, *, rng: np.random.Generator
+    ) -> np.ndarray:
+        """Materialize the index plan for ``steps`` batches as [steps, B].
+
+        Consumes ``rng`` draw-for-draw identically to pulling ``steps``
+        batches from :meth:`batches` (one ``rng.permutation`` per epoch
+        entered, nothing else) — the batched cohort engine relies on this to
+        reproduce the sequential engine's RNG stream exactly.
+        """
+        n = self.num_examples()
+        if n < batch_size:
+            raise ValueError(
+                f"client {self.client_id}: shard of {n} examples cannot fill "
+                f"batches of {batch_size}"
+            )
+        out: List[np.ndarray] = []
+        while len(out) < steps:
+            order = rng.permutation(n)
+            for i in range(0, n - batch_size + 1, batch_size):
+                out.append(order[i : i + batch_size])
+                if len(out) == steps:
+                    break
+        return np.stack(out, axis=0)
+
 
 _PROTO_CACHE: Dict[int, np.ndarray] = {}
 

@@ -25,6 +25,15 @@ from repro.kernels.swiglu import swiglu_fused
 from repro.utils import flatten_to_vector, unflatten_from_vector
 
 
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compiled on TPU, interpreted elsewhere.
+
+    Lets callers (the FL server's kernel-backed aggregation path) run the
+    same code on the CPU CI substrate and the TPU target.
+    """
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "block_q", "block_kv", "interpret")
 )

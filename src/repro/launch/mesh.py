@@ -8,14 +8,31 @@ module never touches jax device state — the dry-run must set XLA_FLAGS
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; older jax is Auto-only
+    from jax.sharding import AxisType
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+except ImportError:  # pragma: no cover - depends on installed jax
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context across jax versions: jax.set_mesh when present
+    (jax >= 0.5), else the Mesh object's own context manager."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1):
@@ -23,8 +40,7 @@ def make_host_mesh(*, data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(min(model, n // max(data, 1)), 1)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _mesh((data, model), ("data", "model"))
 
 
 # Hardware constants for the roofline (TPU v5e)

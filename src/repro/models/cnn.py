@@ -9,6 +9,7 @@ every paper-figure benchmark.
 
 from __future__ import annotations
 
+import functools
 from typing import Dict
 
 import jax
@@ -62,4 +63,157 @@ def cnn_loss(params, batch):
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
     loss = jnp.mean(nll)
     acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Stacked-cohort forward: the batched FL engine's formulation.
+#
+# The same CNN evaluated for C clients at once, with a per-client leading
+# axis on every parameter leaf. lax.conv with per-client kernels lowers to
+# grouped convolutions (slow on CPU) and reduce_window's gradient lowers to
+# SelectAndScatter (very slow on CPU), so this path reformulates:
+#  - convolution as patch-gather + batched matmul (same accumulation
+#    layout as the HWIO kernel, so outputs match cnn_apply numerically);
+#  - 2x2 max-pool as an elementwise max of four strided views with a
+#    custom VJP that routes the cotangent to the first window element
+#    attaining the max (row-major), replicating SelectAndScatter's
+#    tie-breaking so batched training tracks the sequential trajectory.
+# ---------------------------------------------------------------------------
+
+
+def _pool_parts(x):
+    a = x[..., 0::2, 0::2, :]
+    b = x[..., 0::2, 1::2, :]
+    c = x[..., 1::2, 0::2, :]
+    d = x[..., 1::2, 1::2, :]
+    return a, b, c, d
+
+
+@jax.custom_vjp
+def maxpool2x2(x):
+    """2x2/stride-2 max-pool over [..., H, W, ch] without SelectAndScatter."""
+    a, b, c, d = _pool_parts(x)
+    return jnp.maximum(jnp.maximum(a, b), jnp.maximum(c, d))
+
+
+def _maxpool2x2_fwd(x):
+    m = maxpool2x2(x)
+    return m, (x, m)
+
+
+def _maxpool2x2_bwd(res, g):
+    x, m = res
+    a, b, c, d = _pool_parts(x)
+    ea = a >= m
+    eb = (b >= m) & ~ea
+    ec = (c >= m) & ~ea & ~eb
+    ed = (d >= m) & ~ea & ~eb & ~ec
+    zero = jnp.zeros_like(g)
+    ga, gb, gc, gd = (
+        jnp.where(ea, g, zero),
+        jnp.where(eb, g, zero),
+        jnp.where(ec, g, zero),
+        jnp.where(ed, g, zero),
+    )
+    # interleave quads back: dx[..., 2i+di, 2j+dj, :] = g_{di,dj}[..., i, j, :]
+    top = jnp.stack([ga, gb], axis=-2)  # [..., Hh, Wh, 2, ch]
+    bot = jnp.stack([gc, gd], axis=-2)
+    quad = jnp.stack([top, bot], axis=-4)  # [..., Hh, 2, Wh, 2, ch]
+    return (quad.reshape(x.shape),)
+
+
+maxpool2x2.defvjp(_maxpool2x2_fwd, _maxpool2x2_bwd)
+
+
+def _patches3x3(x):
+    """[C, B, H, W, cin] -> [C, B, H, W, 9*cin], SAME padding, (kh, kw, cin)
+    channel order — matches an HWIO kernel flattened with .reshape(-1, cout).
+    (An offset-major [C,B,9,H,W,cin] stack copies faster in isolation but
+    changes the GEMM accumulation order enough to drift the training
+    trajectory off the sequential engine's; full-program wall time is equal
+    within measurement noise, so the parity-preserving layout wins.)"""
+    C, B, H, W, cin = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [xp[:, :, dy : dy + H, dx : dx + W, :] for dy in range(3) for dx in range(3)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _conv3x3_gemm(x, wf, data_input=False):
+    """3x3 SAME conv, per-client kernels: x [C,B,H,W,cin], wf [C,9*cin,cout].
+
+    Forward is im2col + one batched GEMM. The custom VJP avoids the naive
+    transpose (which materializes a [.., 9*cin] cotangent the size of the
+    patches and scatters it back): the weight grad reuses the forward's
+    patches, and the input grad accumulates nine small shifted GEMMs
+    directly into the padded canvas. ``data_input=True`` short-circuits the
+    input grad to zeros (the first layer's images take no gradient).
+    """
+    p = _patches3x3(x)
+    return jnp.einsum("cbhwk,cko->cbhwo", p, wf)
+
+
+def _conv3x3_gemm_fwd(x, wf, data_input):
+    p = _patches3x3(x)
+    out = jnp.einsum("cbhwk,cko->cbhwo", p, wf)
+    return out, (x, p, wf)
+
+
+def _conv3x3_gemm_bwd(data_input, res, g):
+    x, p, wf = res
+    C, B, H, W, cin = x.shape
+    dwf = jnp.einsum("cbhwk,cbhwo->cko", p, g)
+    if data_input:
+        return jnp.zeros_like(x), dwf
+    dxp = jnp.zeros((C, B, H + 2, W + 2, cin), x.dtype)
+    for k in range(9):
+        dy, dx = divmod(k, 3)
+        dpk = jnp.einsum("cbhwo,cko->cbhwk", g, wf[:, k * cin : (k + 1) * cin, :])
+        dxp = dxp.at[:, :, dy : dy + H, dx : dx + W, :].add(dpk)
+    return dxp[:, :, 1:-1, 1:-1, :], dwf
+
+
+_conv3x3_gemm.defvjp(_conv3x3_gemm_fwd, _conv3x3_gemm_bwd)
+
+
+def _conv_stacked(x, w, b, data_input=False):
+    """x [C,B,H,W,cin]; w [C,3,3,cin,cout] — per-client kernels as one
+    batched GEMM over gathered patches."""
+    C = x.shape[0]
+    cout = w.shape[-1]
+    wf = w.reshape(C, -1, cout)
+    out = _conv3x3_gemm(x, wf, data_input)
+    return out + b[:, None, None, None, :]
+
+
+def cnn_apply_stacked(params, images):
+    """Per-client params (leading axis C) applied to [C, B, 28, 28, 1]."""
+    x = jax.nn.relu(
+        _conv_stacked(
+            images, params["conv1"]["w"], params["conv1"]["b"], data_input=True
+        )
+    )
+    x = maxpool2x2(x)
+    x = jax.nn.relu(_conv_stacked(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = maxpool2x2(x)
+    C, B = x.shape[:2]
+    x = x.reshape(C, B, -1)
+    x = jax.nn.relu(
+        jnp.einsum("cbd,cdf->cbf", x, params["fc1"]["w"]) + params["fc1"]["b"][:, None, :]
+    )
+    return (
+        jnp.einsum("cbf,cfo->cbo", x, params["fc2"]["w"]) + params["fc2"]["b"][:, None, :]
+    )
+
+
+def cnn_loss_stacked(params, batch):
+    """Cohort loss: {'images': [C,B,...], 'labels': [C,B]} ->
+    (per-client loss [C], per-client metrics)."""
+    logits = cnn_apply_stacked(params, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll, axis=-1)  # [C]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32), axis=-1)
     return loss, {"loss": loss, "accuracy": acc}

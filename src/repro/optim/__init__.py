@@ -6,6 +6,7 @@ from repro.optim.optimizers import (
     nesterov_outer,
     fedopt_server,
     clip_by_global_norm,
+    clip_by_global_norm_stacked,
     apply_updates,
 )
 from repro.optim.schedules import constant, cosine_warmup, linear_warmup
@@ -18,6 +19,7 @@ __all__ = [
     "nesterov_outer",
     "fedopt_server",
     "clip_by_global_norm",
+    "clip_by_global_norm_stacked",
     "apply_updates",
     "constant",
     "cosine_warmup",

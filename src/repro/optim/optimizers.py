@@ -38,6 +38,28 @@ def clip_by_global_norm(grads, max_norm: float):
     return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
 
 
+def clip_by_global_norm_stacked(grads, max_norm: float):
+    """Per-client clip over a stacked cohort tree (leading axis C on every
+    leaf): each client's slice is clipped by ITS OWN global norm, matching
+    ``clip_by_global_norm`` applied client-by-client."""
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(
+        sum(
+            jnp.sum(
+                jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim))
+            )
+            for l in leaves
+        )
+    )  # [C]
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+
+    def one(g):
+        s = scale.reshape((-1,) + (1,) * (g.ndim - 1))
+        return g * s.astype(g.dtype)
+
+    return jax.tree.map(one, grads), gn
+
+
 # ---------------------------------------------------------------------------
 
 

@@ -135,11 +135,15 @@ def sim_transfer(
         delivered = w - lost
         t += rtt
         if delivered == 0:
-            # whole window lost -> RTO
+            # Whole window lost -> RTO. Each retransmission is itself an
+            # independent Bernoulli(p) loss; the *escalation* lives in the
+            # exponentially backed-off timer (rto doubles per failed
+            # retransmit, capped at max_rto), not in the loss probability —
+            # so the stall compounds as rto, 2*rto, 4*rto, ... while the
+            # per-attempt loss probability stays the link's p.
             t += rto
             consecutive_rtos = 1
-            while rng.random() < p ** 1 and consecutive_rtos < tcp.tcp_retries2:
-                # retransmission itself lost; escalate
+            while consecutive_rtos < tcp.tcp_retries2 and rng.random() < p:
                 rto = min(rto * 2, tcp.max_rto)
                 t += rto
                 consecutive_rtos += 1
@@ -224,3 +228,274 @@ def sim_client_round(
     if not up.success:
         return SimOutcome(False, t, events, reconnects)
     return SimOutcome(True, t, events, reconnects, bytes_acked=update_bytes + download_bytes)
+
+
+# ===========================================================================
+# Vectorized cohort Monte Carlo
+# ===========================================================================
+#
+# Batched-draw counterpart of the per-client event loops above: every random
+# decision for the whole cohort is sampled with one numpy call, and the
+# stateful loops (keepalive cycles, AIMD windows, RTO backoff) run in
+# lockstep across clients — loop iterations are shared, draws are [C]-shaped.
+# Same mechanisms and distributions as sim_client_round, but cohort wall
+# time no longer scales with cohort size in Python. Event traces are NOT
+# produced here; use sim_client_round when a trace is needed.
+
+
+@dataclass
+class CohortOutcome:
+    """Per-client arrays for one cohort round (all shape [C])."""
+
+    success: np.ndarray  # bool
+    time: np.ndarray  # float seconds
+    reconnects: np.ndarray  # int
+    bytes_acked: np.ndarray  # int
+
+
+@dataclass
+class _LinkArrays:
+    loss: np.ndarray
+    delay: np.ndarray
+    jitter: np.ndarray
+    rate_mbps: np.ndarray
+    queue_limit: np.ndarray
+    middlebox_timeout: np.ndarray
+
+    @classmethod
+    def from_links(cls, links: List[LinkProfile]) -> "_LinkArrays":
+        return cls(
+            loss=np.array([l.loss for l in links], float),
+            delay=np.array([l.delay for l in links], float),
+            jitter=np.array([l.jitter for l in links], float),
+            rate_mbps=np.array([l.rate_mbps for l in links], float),
+            queue_limit=np.array([l.queue_limit for l in links], float),
+            middlebox_timeout=np.array([l.middlebox_timeout for l in links], float),
+        )
+
+    def take(self, idx: np.ndarray) -> "_LinkArrays":
+        return _LinkArrays(
+            self.loss[idx], self.delay[idx], self.jitter[idx],
+            self.rate_mbps[idx], self.queue_limit[idx],
+            self.middlebox_timeout[idx],
+        )
+
+
+def _rtt_samples(la: _LinkArrays, rng: np.random.Generator, extra_shape=()) -> np.ndarray:
+    shape = extra_shape + la.delay.shape
+    j = (rng.normal(0.0, 1.0, shape) + rng.normal(0.0, 1.0, shape)) * la.jitter
+    return np.maximum(2.0 * la.delay + j, 1e-5)
+
+
+def _bern_ok(la: _LinkArrays, rng: np.random.Generator, extra_shape=()) -> np.ndarray:
+    """Both directions survive loss (SYN/probe out + ACK back)."""
+    shape = extra_shape + la.loss.shape
+    return (rng.random(shape) >= la.loss) & (rng.random(shape) >= la.loss)
+
+
+def _cohort_handshake(
+    tcp: TcpParams, la: _LinkArrays, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (success [k], time [k]); all SYN attempts sampled at once."""
+    k = la.loss.shape[0]
+    budget = tcp.handshake_budget
+    attempts = tcp.tcp_syn_retries + 1
+    t_send = np.arange(attempts) * tcp.syn_rto  # [R]
+    rtt = _rtt_samples(la, rng, (attempts,)).T  # [k, R]
+    delivered = _bern_ok(la, rng, (attempts,)).T  # [k, R]
+    ok = delivered & (t_send[None, :] <= budget) & (t_send[None, :] + rtt <= budget)
+    success = ok.any(axis=1)
+    first = np.argmax(ok, axis=1)
+    time = np.where(success, t_send[first] + rtt[np.arange(k), first], budget)
+    return success, time
+
+
+def _cohort_idle(
+    tcp: TcpParams, la: _LinkArrays, idle_time: np.ndarray, rng: np.random.Generator
+) -> np.ndarray:
+    """Keepalive/middlebox outcome per client: 0 alive, 1 detected_dead,
+    2 silent_dead. Probe cycles run in lockstep; draws are [k] per cycle."""
+    k = la.loss.shape[0]
+    state = np.zeros(k, np.int8)
+    mbox = la.middlebox_timeout
+    no_probe = tcp.tcp_keepalive_time >= idle_time
+    state[no_probe & (idle_time > mbox)] = 2
+
+    undecided = ~no_probe
+    if not undecided.any():
+        return state
+    last_refresh = np.zeros(k)
+    consecutive = np.zeros(k, np.int64)
+    t = tcp.tcp_keepalive_time
+    t_max = float(idle_time.max())
+    while undecided.any() and t <= t_max:
+        active = undecided & (t <= idle_time)
+        rtt = _rtt_samples(la, rng)
+        ok = _bern_ok(la, rng) & (rtt <= tcp.tcp_keepalive_intvl)
+        gap_drop = active & (t - last_refresh > mbox)
+        state[gap_drop] = 2
+        undecided &= ~gap_drop
+        active &= ~gap_drop
+        refreshed = active & ok
+        last_refresh[refreshed] = t
+        consecutive[refreshed] = 0
+        failed = active & ~ok
+        consecutive[failed] += 1
+        dead = failed & (consecutive >= tcp.tcp_keepalive_probes)
+        state[dead] = 1
+        undecided &= ~dead
+        t += tcp.tcp_keepalive_intvl
+    tail = undecided & (idle_time - last_refresh > mbox)
+    state[tail] = 2
+    return state
+
+
+def _cohort_transfer(
+    tcp: TcpParams, la: _LinkArrays, nbytes: int, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Lockstep AIMD over the cohort; returns (success [k], time [k]).
+
+    Mirrors sim_transfer's per-window mechanics (window sizing, binomial
+    loss, SACK reorder accounting, RTO backoff with constant per-attempt
+    loss probability) with one [k]-shaped draw per shared loop iteration.
+    """
+    k = la.loss.shape[0]
+    segs_total = max(1, math.ceil(nbytes / tcp.mss))
+    wnd_max = max(tcp.window_bytes // tcp.mss, 2)
+    t = np.zeros(k)
+    cwnd = np.full(k, 10.0)
+    acked = np.zeros(k, np.int64)
+    pending = np.zeros(k, np.int64)
+    rto = np.full(k, tcp.initial_rto)
+    reorder = np.zeros(k)
+    active = np.ones(k, bool)
+    success = np.zeros(k, bool)
+    p = la.loss
+
+    iters = 0
+    while active.any():
+        iters += 1
+        if iters > 200_000:
+            break  # iteration cap: survivors count as failed (as sequential)
+        rtt = _rtt_samples(la, rng)
+        rate_cap = np.where(
+            la.rate_mbps > 0,
+            np.maximum((la.rate_mbps * 1e6 / 8.0 * rtt / tcp.mss).astype(np.int64), 1),
+            np.int64(2**60),
+        )
+        w = np.minimum(np.minimum(cwnd.astype(np.int64), wnd_max), np.minimum(la.queue_limit.astype(np.int64), rate_cap))
+        remaining = np.maximum(segs_total - acked + pending, 0)
+        w = np.minimum(np.maximum(w, 1), remaining)
+        w = np.where(active, w, 0)  # finished/failed rows draw nothing
+        lost = rng.binomial(w, p)
+        delivered = w - lost
+        t = np.where(active, t + rtt, t)
+
+        # --- whole-window loss -> RTO backoff (lockstep over the stalled) ---
+        stalled = active & (delivered == 0)
+        if stalled.any():
+            t[stalled] += rto[stalled]
+            consecutive = np.where(stalled, 1, 0)
+            still = stalled.copy()
+            while still.any():
+                lost_again = rng.random(k) < p
+                cont = still & (consecutive < tcp.tcp_retries2) & lost_again
+                dead_now = still & (consecutive >= tcp.tcp_retries2)
+                still = cont
+                rto[cont] = np.minimum(rto[cont] * 2.0, tcp.max_rto)
+                t[cont] += rto[cont]
+                consecutive[cont] += 1
+                active &= ~dead_now
+            surv = stalled & active
+            cwnd[surv] = 10.0
+            rto[surv] = np.minimum(rto[surv] * 2.0, tcp.max_rto)
+
+        # --- progress: ack, SACK holes, cwnd evolution ---
+        prog = active & (delivered > 0)
+        rto[prog] = tcp.initial_rto
+        holed = prog & (lost > 0) & tcp.tcp_sack
+        reorder[holed] += delivered[holed] * tcp.mss
+        buf_dead = holed & (reorder > tcp.tcp_rmem * 48)
+        active &= ~buf_dead
+        holed &= ~buf_dead
+        cwnd[holed] = np.maximum(cwnd[holed] / 2.0, 2.0)
+        pending[holed] = lost[holed]
+        clean = prog & ~holed & active
+        reorder[clean] = 0.0
+        pending[clean] = 0
+        cwnd[clean] = np.where(
+            cwnd[clean] >= wnd_max / 2.0, cwnd[clean] + 1.0, cwnd[clean] * 2.0
+        )
+        acked = np.where(prog & active, acked + delivered, acked)
+        done = active & (acked >= segs_total)
+        success |= done
+        active &= ~done
+    return success, t
+
+
+def sim_cohort_round(
+    tcp: TcpParams,
+    links: List[LinkProfile],
+    *,
+    update_bytes: int,
+    local_train_times: np.ndarray,
+    rng: np.random.Generator,
+    connected: np.ndarray,
+    download_bytes: Optional[int] = None,
+) -> CohortOutcome:
+    """One FL round for a whole cohort with batched draws.
+
+    Vector twin of ``sim_client_round``: handshake-if-needed -> download ->
+    idle (keepalive/middlebox) -> reconnect-if-dead -> upload, each stage
+    sampled for every client at once. ``connected`` and
+    ``local_train_times`` are [C]-shaped.
+    """
+    download_bytes = update_bytes if download_bytes is None else download_bytes
+    la = _LinkArrays.from_links(links)
+    k = len(links)
+    t = np.zeros(k)
+    reconnects = np.zeros(k, np.int64)
+    alive = np.ones(k, bool)
+    local_train_times = np.asarray(local_train_times, float)
+    connected = np.asarray(connected, bool)
+
+    def subset(mask):
+        return np.where(mask)[0]
+
+    idx = subset(~connected)
+    if idx.size:
+        ok, ht = _cohort_handshake(tcp, la.take(idx), rng)
+        t[idx] += ht
+        reconnects[idx] += 1
+        alive[idx] &= ok
+
+    idx = subset(alive)
+    if idx.size:
+        ok, dt = _cohort_transfer(tcp, la.take(idx), download_bytes, rng)
+        t[idx] += dt
+        alive[idx] &= ok
+
+    idx = subset(alive)
+    if idx.size:
+        state = _cohort_idle(tcp, la.take(idx), local_train_times[idx], rng)
+        t[idx] += local_train_times[idx]
+        silent = idx[state == 2]
+        stall = min(
+            sum(min(tcp.initial_rto * 2**i, tcp.max_rto) for i in range(6)), 60.0
+        )
+        t[silent] += stall
+        need_hs = idx[state != 0]
+        if need_hs.size:
+            ok, ht = _cohort_handshake(tcp, la.take(need_hs), rng)
+            t[need_hs] += ht
+            reconnects[need_hs] += 1
+            alive[need_hs] &= ok
+
+    idx = subset(alive)
+    if idx.size:
+        ok, ut = _cohort_transfer(tcp, la.take(idx), update_bytes, rng)
+        t[idx] += ut
+        alive[idx] &= ok
+
+    bytes_acked = np.where(alive, update_bytes + download_bytes, 0).astype(np.int64)
+    return CohortOutcome(alive, t, reconnects, bytes_acked)

@@ -77,6 +77,29 @@ def tree_weighted_mean(trees, weights):
     return jax.tree.map(_avg, *trees)
 
 
+def tree_stack(trees):
+    """Stack a list of identically-structured pytrees along a new leading axis.
+
+    The inverse of :func:`tree_unstack`; the batched cohort engine uses the
+    stacked layout (leading client dim C on every leaf) as its wire format.
+    """
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves, axis=0), *trees)
+
+
+def tree_unstack(tree):
+    """Split a stacked pytree (leading axis C on every leaf) into C pytrees."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return []
+    c = leaves[0].shape[0]
+    return [jax.tree.unflatten(treedef, [l[i] for l in leaves]) for i in range(c)]
+
+
+def tree_broadcast_leading(tree, n: int):
+    """Broadcast every leaf to a leading axis of size n (no copy under jit)."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
 def flatten_to_vector(tree):
     """Flatten a pytree of arrays into one 1-D float32 vector.
 

@@ -75,6 +75,50 @@ def test_fedavg_reduce_weight_normalization():
     assert jnp.allclose(a, b, atol=1e-6)
 
 
+def test_fedavg_reduce_vs_tree_weighted_mean_oracle():
+    """Kernel == tree_weighted_mean on a realistic multi-leaf delta tree:
+    non-tile-multiple leaf sizes (padding path), bf16 leaves, and raw
+    (unnormalized) example-count weights."""
+    from repro.utils import tree_unstack, tree_weighted_mean
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    C = 5
+    stacked = {
+        "conv": {
+            "w": jax.random.normal(ks[0], (C, 3, 3, 1, 16)),  # 144 < tile
+            "b": jax.random.normal(ks[1], (C, 16)),
+        },
+        "fc": jax.random.normal(ks[2], (C, 123, 37)),  # 4551 % 2048 != 0
+        "half": jax.random.normal(ks[3], (C, 2049), jnp.bfloat16),
+    }
+    weights = jnp.array([320.0, 64.0, 128.0, 7.0, 1.0])  # unnormalized counts
+    got = ops.fedavg_reduce(stacked, weights, interpret=True)
+    expect = tree_weighted_mean(tree_unstack(stacked), np.array(weights))
+    for g, e in zip(jax.tree.leaves(got), jax.tree.leaves(expect)):
+        tol = 3e-2 if g.dtype == jnp.bfloat16 else 1e-5
+        assert g.dtype == e.dtype
+        assert jnp.allclose(
+            g.astype(jnp.float32), e.astype(jnp.float32), atol=tol
+        ), float(jnp.max(jnp.abs(g.astype(jnp.float32) - e.astype(jnp.float32))))
+
+
+def test_fedavg_reduce_single_client_identity():
+    """C=1: the weighted mean of one delta is the delta itself (any weight)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3000))
+    out = ops.fedavg_reduce({"x": x}, jnp.array([17.0]), interpret=True)["x"]
+    assert jnp.allclose(out, x[0], atol=1e-6)
+
+
+@pytest.mark.parametrize("N", [1, 100, 2048, 2049, 12345])
+def test_fedavg_reduce_padding_sweep(N):
+    """Non-tile-multiple flattened sizes exercise the kernel's pad path."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, N))
+    w = jnp.array([1.0, 2.0, 5.0])
+    got = ops.fedavg_reduce({"x": x}, w, interpret=True)["x"]
+    expect = ref.fedavg_reduce_ref(x, w / w.sum())
+    assert jnp.allclose(got, expect, atol=1e-5)
+
+
 @pytest.mark.parametrize("n", [100, 4096, 9999])
 def test_quantize_sweep(n):
     tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (n,)) * 3.0}

@@ -1,0 +1,269 @@
+"""Batched cohort engine tests: RNG-stream parity with the sequential
+engine, stacked aggregation vs list-path oracles, the stacked CNN forward
+vs the per-client forward, and the vectorized transport Monte Carlo."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosSchedule
+from repro.core import (
+    EdgeClient,
+    FederatedServer,
+    ServerConfig,
+    fedavg,
+    fedprox,
+    krum,
+    median,
+    mnist_cnn_task,
+    trimmed_mean,
+)
+from repro.data import make_federated_mnist, synthetic_mnist
+from repro.transport import DEFAULT, LAB, LinkProfile
+from repro.transport.des import sim_client_round, sim_cohort_round
+from repro.utils import tree_stack, tree_unstack
+
+# one shared task so every test reuses the same jit caches
+TASK = mnist_cnn_task()
+
+
+def _server(batched, *, strategy=None, rounds=3, stochastic=False, seed=0,
+            compressor=None, n_clients=6):
+    shards = make_federated_mnist(n_clients, 64, seed=seed)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    return FederatedServer(
+        TASK,
+        clients,
+        strategy or fedavg(min_fit=0.5),
+        tcp=DEFAULT,
+        chaos=ChaosSchedule(LAB),
+        config=ServerConfig(
+            rounds=rounds, local_steps=2, seed=seed, batched=batched,
+            stochastic=stochastic,
+        ),
+        compressor=compressor,
+        eval_data=synthetic_mnist(2000, seed=77),
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine parity (the headline contract)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_engine_matches_sequential_summary():
+    """Same seed => same History.summary(): identical round outcomes and
+    simulated clock, final accuracy within 1e-3 (vmap-vs-loop numerics)."""
+    h_seq = _server(batched=False).run()
+    h_bat = _server(batched=True).run()
+    s, b = h_seq.summary(), h_bat.summary()
+    assert s["rounds"] == b["rounds"]
+    assert s["completed_rounds"] == b["completed_rounds"]
+    assert abs(s["total_time_s"] - b["total_time_s"]) < 1e-9
+    assert abs(s["mean_reconnects"] - b["mean_reconnects"]) < 1e-9
+    assert abs(s["final_accuracy"] - b["final_accuracy"]) <= 1e-3
+
+
+def test_batched_local_fit_rng_and_delta_parity():
+    """batched_local_fit consumes the rng stream exactly like sequential
+    local_fit per client in order, and produces the same deltas."""
+    shards = make_federated_mnist(4, 64, seed=1)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    params = TASK.init_fn(jax.random.PRNGKey(0))
+    r_bat, r_seq = np.random.default_rng(9), np.random.default_rng(9)
+
+    stacked, weights, metrics = TASK.batched_local_fit(params, clients, 2, r_bat, 0.0)
+    deltas = tree_unstack(stacked)
+    for i, client in enumerate(clients):
+        d, n_ex, m = TASK.local_fit(params, client, 2, r_seq, 0.0)
+        assert weights[i] == n_ex
+        for a, b in zip(jax.tree.leaves(deltas[i]), jax.tree.leaves(d)):
+            assert float(jnp.max(jnp.abs(a - b))) < 1e-5
+        assert abs(metrics[i]["loss"] - m["loss"]) < 1e-4
+    # both paths left the generators at the same position
+    assert r_bat.integers(0, 2**31) == r_seq.integers(0, 2**31)
+
+
+def test_batched_engine_stochastic_and_compressed_modes_run():
+    from repro.compress import get_compressor
+
+    hist = _server(batched=True, stochastic=True, rounds=2).run()
+    assert hist.rounds  # DES cohort path executed
+    hist = _server(batched=True, compressor=get_compressor("int8"), rounds=2).run()
+    assert hist.completed_rounds == 2  # unstack + error-feedback path
+
+
+def test_batched_engine_prox_matches_sequential():
+    h_seq = _server(batched=False, strategy=fedprox(mu=0.05), rounds=2).run()
+    h_bat = _server(batched=True, strategy=fedprox(mu=0.05), rounds=2).run()
+    assert abs(h_seq.summary()["final_accuracy"] - h_bat.summary()["final_accuracy"]) <= 1e-3
+
+
+# ---------------------------------------------------------------------------
+# stacked aggregation vs list-path oracles
+# ---------------------------------------------------------------------------
+
+
+def _random_stacked(c=5, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {
+        "w": jax.random.normal(ks[0], (c, 8, 4)),
+        "b": jax.random.normal(ks[1], (c, 4)),
+    }
+
+
+@pytest.mark.parametrize("make", [fedavg, lambda: trimmed_mean(0.2), median, krum])
+def test_stacked_aggregate_matches_list_path(make):
+    stacked = _random_stacked()
+    weights = [3.0, 1.0, 2.0, 5.0, 4.0]
+    strat_a, strat_b = make(), make()
+    zero = jax.tree.map(lambda x: jnp.zeros_like(x[0]), stacked)
+    out_list = strat_a.aggregate(zero, tree_unstack(stacked), weights, 0)
+    out_stacked = strat_b.aggregate_stacked(zero, stacked, weights, 0)
+    for a, b in zip(jax.tree.leaves(out_list), jax.tree.leaves(out_stacked)):
+        assert jnp.allclose(a, b, atol=1e-5), (strat_a.name, float(jnp.max(jnp.abs(a - b))))
+
+
+def test_aggregate_stacked_falls_back_without_stacked_fn():
+    strat = fedavg()
+    strat.stacked_aggregate_fn = None
+    stacked = _random_stacked()
+    zero = jax.tree.map(lambda x: jnp.zeros_like(x[0]), stacked)
+    out = strat.aggregate_stacked(zero, stacked, [1.0] * 5, 0)
+    expect = fedavg().aggregate(zero, tree_unstack(stacked), [1.0] * 5, 0)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        assert jnp.allclose(a, b, atol=1e-6)
+
+
+def test_tree_stack_unstack_roundtrip():
+    trees = [
+        {"a": jnp.full((3,), float(i)), "b": jnp.full((2, 2), -float(i))}
+        for i in range(4)
+    ]
+    back = tree_unstack(tree_stack(trees))
+    for orig, rt in zip(trees, back):
+        for a, b in zip(jax.tree.leaves(orig), jax.tree.leaves(rt)):
+            assert jnp.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# stacked CNN forward / pooling VJP
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_apply_stacked_matches_per_client():
+    from repro.models.cnn import cnn_apply, cnn_apply_stacked, cnn_init
+
+    C, B = 3, 8
+    keys = jax.random.split(jax.random.PRNGKey(0), C)
+    per_client = [cnn_init(k) for k in keys]
+    stacked = tree_stack(per_client)
+    images = jax.random.uniform(jax.random.PRNGKey(1), (C, B, 28, 28, 1))
+    got = cnn_apply_stacked(stacked, images)
+    for c in range(C):
+        expect = cnn_apply(per_client[c], images[c])
+        assert jnp.allclose(got[c], expect, atol=1e-4)
+
+
+def test_maxpool2x2_matches_reduce_window_grads():
+    """Forward equals reduce_window; backward replicates SelectAndScatter's
+    first-match tie-breaking (exercised via a constant-tie input)."""
+    from repro.models.cnn import maxpool2x2
+
+    def pool_ref(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    x_rand = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 3))
+    x_ties = jnp.ones((2, 8, 8, 3))
+    for x in (x_rand, x_ties):
+        assert jnp.allclose(maxpool2x2(x), pool_ref(x), atol=0)
+        g_new = jax.grad(lambda v: jnp.sum(maxpool2x2(v) ** 2))(x)
+        g_ref = jax.grad(lambda v: jnp.sum(pool_ref(v) ** 2))(x)
+        assert jnp.allclose(g_new, g_ref, atol=1e-6)
+
+
+def test_clip_by_global_norm_stacked_per_client():
+    from repro.optim import clip_by_global_norm, clip_by_global_norm_stacked
+
+    trees = [
+        {"a": jnp.array([3.0, 4.0]) * s, "b": jnp.full((2, 2), 0.1 * s)}
+        for s in (0.1, 1.0, 10.0)
+    ]
+    stacked = tree_stack(trees)
+    clipped_stacked, gn = clip_by_global_norm_stacked(stacked, 1.0)
+    back = tree_unstack(clipped_stacked)
+    for i, tree in enumerate(trees):
+        expect, gn_i = clip_by_global_norm(tree, 1.0)
+        assert jnp.allclose(gn[i], gn_i, atol=1e-6)
+        for a, b in zip(jax.tree.leaves(back[i]), jax.tree.leaves(expect)):
+            assert jnp.allclose(a, b, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# vectorized transport Monte Carlo
+# ---------------------------------------------------------------------------
+
+
+def test_sim_cohort_round_shapes_and_determinism():
+    links = [LAB, LAB.replace(loss=0.02), LAB.replace(delay=0.1)]
+    out_a = sim_cohort_round(
+        DEFAULT, links, update_bytes=200_000,
+        local_train_times=np.array([5.0, 10.0, 30.0]),
+        rng=np.random.default_rng(0),
+        connected=np.array([False, True, True]),
+    )
+    out_b = sim_cohort_round(
+        DEFAULT, links, update_bytes=200_000,
+        local_train_times=np.array([5.0, 10.0, 30.0]),
+        rng=np.random.default_rng(0),
+        connected=np.array([False, True, True]),
+    )
+    assert out_a.success.shape == (3,) and out_a.time.shape == (3,)
+    assert np.array_equal(out_a.success, out_b.success)
+    assert np.allclose(out_a.time, out_b.time)
+    assert out_a.reconnects[0] >= 1  # disconnected client had to handshake
+    assert np.all(out_a.time >= 0)
+
+
+def test_sim_cohort_round_matches_des_statistics():
+    """Cohort MC and per-client DES sample the same mechanisms: their
+    success rates and mean times agree on a lossy link."""
+    link = LinkProfile("lossy", delay=0.02, loss=0.03, rate_mbps=20.0)
+    n = 200
+    rng = np.random.default_rng(0)
+    des = [
+        sim_client_round(
+            DEFAULT, link, update_bytes=100_000, local_train_time=5.0,
+            rng=rng, connected=False,
+        )
+        for _ in range(n)
+    ]
+    out = sim_cohort_round(
+        DEFAULT, [link] * n, update_bytes=100_000,
+        local_train_times=np.full(n, 5.0),
+        rng=np.random.default_rng(1),
+        connected=np.zeros(n, bool),
+    )
+    des_rate = np.mean([o.success for o in des])
+    coh_rate = float(np.mean(out.success))
+    assert abs(des_rate - coh_rate) < 0.12, (des_rate, coh_rate)
+    des_t = np.mean([o.time for o in des if o.success])
+    coh_t = float(np.mean(out.time[out.success]))
+    assert abs(des_t - coh_t) / max(des_t, 1e-9) < 0.25, (des_t, coh_t)
+
+
+def test_cohort_partitioned_client_fails():
+    """A fully-partitioned client (loss=1) can never complete; healthy
+    peers in the same cohort still do."""
+    links = [LAB, LAB.replace(loss=1.0), LAB]
+    out = sim_cohort_round(
+        DEFAULT, links, update_bytes=50_000,
+        local_train_times=np.full(3, 2.0),
+        rng=np.random.default_rng(0),
+        connected=np.zeros(3, bool),
+    )
+    assert not out.success[1]
+    assert out.success[0] and out.success[2]
