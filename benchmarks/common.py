@@ -3,17 +3,36 @@
 Every paper figure/table benchmark runs the SAME experiment shape the paper
 used — 10 clients, MNIST CNN, FedAvg, fixed round budget — under swept
 network conditions, and reports (accuracy, training time, completion).
+
+Two execution engines share one configuration surface:
+
+- ``run_fl_experiment(**point)``      — one sweep point, per-point server
+- ``run_fl_grid_experiments(points)`` — a whole characterization grid as
+  one scenario-parallel plane (``repro.core.grid``), bit-identical to
+  calling run_fl_experiment per point at the same seeds.
+
+Shards and the eval set are built once and shared across points: the grid
+engine coalesces identical training rows by dataset identity and memoizes
+eval by parameter provenance, and sharing also keeps the per-point path's
+jit caches warm across a sweep.
 """
 
 from __future__ import annotations
 
 import io
+import math
 import sys
-import time
 from typing import Dict, List, Optional
 
 from repro.chaos import ChaosSchedule
-from repro.core import EdgeClient, FederatedServer, ServerConfig, fedavg
+from repro.core import (
+    EdgeClient,
+    FederatedServer,
+    GridPoint,
+    ServerConfig,
+    fedavg,
+    run_fl_grid,
+)
 from repro.data import make_federated_mnist, synthetic_mnist
 from repro.transport import DEFAULT, LAB, LinkProfile, TcpParams
 
@@ -23,12 +42,15 @@ LOCAL_STEPS = 4
 EXAMPLES_PER_CLIENT = 200
 
 _TASK = None
+_SHARDS: Dict[int, list] = {}
+_EVAL_DATA = None
+last_grid_stats = None  # GridStats of the most recent grid sweep (bench telemetry)
 
 
 def _shared_task():
-    """One task instance for the whole sweep: its jit caches (batched
-    cohort programs, per-client step) are closures on the task, so sharing
-    it amortizes compilation across every sweep point."""
+    """One task instance for the whole sweep: its jit caches (plane
+    programs, per-client step) are closures on the task, so sharing it
+    amortizes compilation across every sweep point."""
     global _TASK
     if _TASK is None:
         from repro.core import mnist_cnn_task
@@ -37,7 +59,23 @@ def _shared_task():
     return _TASK
 
 
-def run_fl_experiment(
+def _shared_shards(seed: int):
+    """Shard list per seed, shared across sweep points (the grid engine
+    keys row coalescing on dataset identity; contents are seed-determined
+    either way)."""
+    if seed not in _SHARDS:
+        _SHARDS[seed] = make_federated_mnist(N_CLIENTS, EXAMPLES_PER_CLIENT, seed=seed)
+    return _SHARDS[seed]
+
+
+def _shared_eval_data():
+    global _EVAL_DATA
+    if _EVAL_DATA is None:
+        _EVAL_DATA = synthetic_mnist(400, seed=4242)
+    return _EVAL_DATA
+
+
+def _make_point(
     *,
     tcp: TcpParams = DEFAULT,
     link: LinkProfile = LAB,
@@ -47,30 +85,71 @@ def run_fl_experiment(
     seed: int = 0,
     local_steps: int = LOCAL_STEPS,
     batched: bool = True,
-) -> Dict[str, float]:
-    shards = make_federated_mnist(N_CLIENTS, EXAMPLES_PER_CLIENT, seed=seed)
-    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
-
-    server = FederatedServer(
-        _shared_task(),
-        clients,
-        fedavg(min_fit=min_fit),
+) -> GridPoint:
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(_shared_shards(seed))]
+    return GridPoint(
+        clients=clients,
+        strategy=fedavg(min_fit=min_fit),
         tcp=tcp,
         chaos=chaos or ChaosSchedule(link),
         config=ServerConfig(
             rounds=rounds, local_steps=local_steps, seed=seed, batched=batched
         ),
-        eval_data=synthetic_mnist(400, seed=4242),
     )
-    hist = server.run()
-    s = hist.summary()
+
+
+def _summarize(s: Dict[str, float], rounds: int) -> Dict[str, float]:
     return {
         "completed_rounds": s["completed_rounds"],
         "training_time_s": round(s["total_time_s"], 1),
-        "accuracy": round(s["final_accuracy"], 4) if s["final_accuracy"] == s["final_accuracy"] else float("nan"),
+        "accuracy": (
+            float("nan")
+            if math.isnan(s["final_accuracy"])
+            else round(s["final_accuracy"], 4)
+        ),
         "trained": 1.0 if s["completed_rounds"] >= rounds * 0.5 else 0.0,
         "mean_reconnects": round(s["mean_reconnects"], 2),
     }
+
+
+def run_fl_experiment(**point) -> Dict[str, float]:
+    p = _make_point(**point)
+    server = FederatedServer(
+        _shared_task(),
+        p.clients,
+        p.strategy,
+        tcp=p.tcp,
+        chaos=p.chaos,
+        config=p.config,
+        eval_data=_shared_eval_data(),
+    )
+    return _summarize(server.run().summary(), p.config.rounds)
+
+
+def run_fl_grid_experiments(points: List[dict], *, return_stats: bool = False):
+    """Evaluate many ``run_fl_experiment`` configurations as ONE grid.
+
+    Each entry of ``points`` is a kwargs dict for run_fl_experiment;
+    results come back in order, bit-identical to per-point runs."""
+    global last_grid_stats
+    gpoints = [_make_point(**kw) for kw in points]
+    res = run_fl_grid(_shared_task(), gpoints, eval_data=_shared_eval_data())
+    last_grid_stats = res.stats
+    out = [
+        _summarize(h.summary(), p.config.rounds)
+        for h, p in zip(res.histories, gpoints)
+    ]
+    return (out, res.stats) if return_stats else out
+
+
+def run_points(points: List[dict], engine: str = "grid") -> List[Dict[str, float]]:
+    """Run a sweep through the selected engine: ``grid`` (scenario-parallel
+    plane) or ``per_point`` (one server per point, the pre-grid loop)."""
+    if engine == "grid":
+        return run_fl_grid_experiments(points)
+    if engine == "per_point":
+        return [run_fl_experiment(**kw) for kw in points]
+    raise ValueError(f"unknown engine {engine!r}")
 
 
 def emit_csv(name: str, header: List[str], rows: List[List]) -> str:
@@ -83,9 +162,3 @@ def emit_csv(name: str, header: List[str], rows: List[List]) -> str:
     sys.stdout.write(out)
     sys.stdout.flush()
     return out
-
-
-def timed(fn, *args, **kw):
-    t0 = time.time()
-    out = fn(*args, **kw)
-    return out, time.time() - t0

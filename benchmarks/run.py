@@ -29,6 +29,7 @@ def main() -> None:
         fig678_tcp_params,
         kernel_bench,
         round_engine_bench,
+        sweep_bench,
         table3_boundaries,
         tuned_vs_default,
     )
@@ -44,6 +45,7 @@ def main() -> None:
         ("adaptive_daemon", adaptive_daemon.main),    # beyond-paper (SecVI)
         ("kernel_bench", kernel_bench.main),
         ("round_engine_bench", round_engine_bench.main),
+        ("sweep_bench", sweep_bench.main),
     ]
 
     summary = []

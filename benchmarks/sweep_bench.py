@@ -1,0 +1,117 @@
+"""Sweep-engine benchmark: scenario-parallel grid vs the per-point loop.
+
+Runs the paper's Fig. 3 characterization grid (delay x tcp-config, the
+full DELAYS ladder unless ``--fast``) through both execution engines at
+the same fixed seed:
+
+- ``per_point``: one FederatedServer per sweep point (the pre-grid loop —
+  each point pays its own local-SGD dispatches and eval syncs per round);
+- ``grid``: ``run_fl_grid`` — per round, every point's transport runs on
+  its own RNG stream, the union of local-training rows executes as one
+  fused plane dispatch with provenance coalescing, and eval is memoized.
+
+Emits a BENCH json line with both wall times, the speedup, plane/coalescing
+telemetry, and EXACT row parity flags (CSV-text equality, nan-aware) for
+fig3, fig4, and table3. Parity failure exits non-zero: the grid engine's
+contract is bit-identical sweep artifacts, not statistical agreement.
+
+Methodology: both engines share one task instance (warm jit caches); a
+thinned fig3 grid through both engines precedes timing so compilation of
+the shared bucketed plane programs is excluded; runs are interleaved and
+the median of ``--reps`` wall times is reported (the CI box has bursty
+background load).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/sweep_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _csv_rows(rows):
+    """Rows as CSV text cells — exact-parity comparison, nan-aware
+    (str(nan) == str(nan), while nan != nan as floats)."""
+    return [[str(x) for x in r] for r in rows]
+
+
+def run_bench(*, fast: bool = False, reps: int = 1):
+    from benchmarks import common, fig3_latency, fig4_loss, table3_boundaries
+
+    reps = max(int(reps), 1)
+
+    # warmup: a thinned fig3 grid through BOTH engines compiles the shared
+    # plane/cohort/eval programs at sweep shapes
+    fig3_latency.compute_rows(fast=True, engine="grid")
+    fig3_latency.compute_rows(fast=True, engine="per_point")
+
+    grid_times, pp_times = [], []
+    rows_grid = rows_pp = None
+    for _ in range(reps):  # interleaved against bursty background load
+        t0 = time.time()
+        rows_grid = fig3_latency.compute_rows(fast=fast, engine="grid")
+        grid_times.append(time.time() - t0)
+        t0 = time.time()
+        rows_pp = fig3_latency.compute_rows(fast=fast, engine="per_point")
+        pp_times.append(time.time() - t0)
+    grid_stats = common.last_grid_stats
+
+    parity_fig3 = _csv_rows(rows_grid) == _csv_rows(rows_pp)
+    parity_fig4 = _csv_rows(fig4_loss.compute_rows(fast=fast, engine="grid")) == _csv_rows(
+        fig4_loss.compute_rows(fast=fast, engine="per_point")
+    )
+    # table3 classifies the grid analytically (no FL runs) — parity here
+    # asserts the sweep artifact is reproducible run to run
+    parity_table3 = _csv_rows(table3_boundaries.compute_rows(fast)) == _csv_rows(
+        table3_boundaries.compute_rows(fast)
+    )
+
+    pp_s = float(np.median(pp_times))
+    grid_s = float(np.median(grid_times))
+    result = {
+        "bench": "sweep_engine",
+        "config": {
+            "grid": "fig3_latency",
+            "points": len(fig3_latency.sweep_points(fast)[1]),
+            "fast": fast,
+            "reps": reps,
+        },
+        "per_point_s": round(pp_s, 3),
+        "grid_s": round(grid_s, 3),
+        "speedup": round(pp_s / grid_s, 3),
+        "per_point_times_s": [round(t, 3) for t in pp_times],
+        "grid_times_s": [round(t, 3) for t in grid_times],
+        "target_speedup": 2.5,
+        "meets_target": pp_s / grid_s >= 2.5,
+        "parity_fig3": parity_fig3,
+        "parity_fig4": parity_fig4,
+        "parity_table3": parity_table3,
+        "parity": parity_fig3 and parity_fig4 and parity_table3,
+        "grid_stats": dataclasses.asdict(grid_stats) if grid_stats else None,
+    }
+    print("BENCH " + json.dumps(result))
+    return result
+
+
+def main(fast: bool = False, reps: int = 1):
+    result = run_bench(fast=fast, reps=reps)
+    if not result["parity"]:
+        print("sweep_bench: PARITY FAILURE", file=sys.stderr)
+        raise SystemExit(1)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="thinned grid (CI)")
+    ap.add_argument("--reps", type=int, default=1)
+    args = ap.parse_args()
+    main(fast=args.fast, reps=args.reps)

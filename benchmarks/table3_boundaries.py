@@ -27,7 +27,7 @@ def classify_failure_rate(rate: float, min_fit: float = 0.1) -> str:
     return "acceptable"
 
 
-def main(fast: bool = False):
+def compute_rows(fast: bool = False):
     rows = []
     for d in DELAYS:
         rows.append(["delay", d, classify(DEFAULT, LAB.replace(delay=d))])
@@ -35,6 +35,11 @@ def main(fast: bool = False):
         rows.append(["loss", p, classify(DEFAULT, LAB.replace(loss=p))])
     for f in FAILS:
         rows.append(["client_failure", f, classify_failure_rate(f)])
+    return rows
+
+
+def main(fast: bool = False):
+    rows = compute_rows(fast)
     emit_csv("table3_boundaries", ["dimension", "value", "region"], rows)
 
     got = {(r[0], r[1]): r[2] for r in rows}

@@ -1,8 +1,9 @@
 """Paper §V validation: three tuned TCP knobs restore training capability
 where defaults fail — the paper's core validated claim, end-to-end through
-the FL engine (not just the transport model)."""
+the FL engine (not just the transport model). All scenario pairs run as
+one grid plane."""
 
-from benchmarks.common import emit_csv, run_fl_experiment
+from benchmarks.common import emit_csv, run_points
 from repro.transport import DEFAULT, LAB, TUNED_EDGE
 
 SCENARIOS = [
@@ -13,11 +14,15 @@ SCENARIOS = [
 ]
 
 
-def main(fast: bool = False):
-    rows = []
+def main(fast: bool = False, engine: str = "grid"):
+    points = []
     for name, link in SCENARIOS:
-        d = run_fl_experiment(tcp=DEFAULT, link=link, local_steps=6)
-        t = run_fl_experiment(tcp=TUNED_EDGE, link=link, local_steps=6)
+        points.append(dict(tcp=DEFAULT, link=link, local_steps=6))
+        points.append(dict(tcp=TUNED_EDGE, link=link, local_steps=6))
+    res = run_points(points, engine)
+    rows = []
+    for i, (name, link) in enumerate(SCENARIOS):
+        d, t = res[2 * i], res[2 * i + 1]
         speedup = (
             round(d["training_time_s"] / t["training_time_s"], 2)
             if t["trained"] and d["trained"]

@@ -3,7 +3,8 @@ learning. Server round engine + strategies + edge-client model; the
 transport/chaos/tuning subpackages supply the network substrate."""
 
 from repro.core.client import EdgeClient, LocalTask, lm_task, mnist_cnn_task
-from repro.core.server import FederatedServer, History, RoundRecord, ServerConfig
+from repro.core.grid import GridPoint, GridResult, GridStats, run_fl_grid
+from repro.core.server import FederatedServer, FitJob, History, RoundRecord, ServerConfig
 from repro.core.strategy import (
     STRATEGIES,
     Strategy,
@@ -22,6 +23,11 @@ __all__ = [
     "mnist_cnn_task",
     "lm_task",
     "FederatedServer",
+    "FitJob",
+    "GridPoint",
+    "GridResult",
+    "GridStats",
+    "run_fl_grid",
     "ServerConfig",
     "History",
     "RoundRecord",

@@ -7,13 +7,23 @@ multiplier over measured step cost, (3) a transport connection state
 
 ``LocalTask`` abstracts the payload: the paper's MNIST CNN and reduced LM
 configs implement the same interface, so every benchmark can swap payloads.
+
+The cohort/scenario hot path is the *plane* formulation: local SGD for any
+set of (anchor params, client, batch plan) rows runs as ONE stacked tensor
+program with a leading row axis. Rows are independent by construction —
+every cross-row operation is batch-mapped, never reduced — so a row's
+result is bitwise identical no matter how rows are grouped into dispatches.
+The batched cohort engine (one scenario, rows = cohort) and the grid engine
+(rows = union of cohorts across sweep points, see ``repro.core.grid``)
+share this runner, which is what makes grid sweeps exactly reproduce
+per-point runs.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +37,7 @@ from repro.optim import (
     clip_by_global_norm_stacked,
     sgd,
 )
-from repro.utils import tree_broadcast_leading, tree_sub
+from repro.utils import tree_stack, tree_sub
 
 
 @dataclass
@@ -46,23 +56,62 @@ class LocalTask:
     # each client in order, so batched/sequential runs share one RNG stream.
     # None => the server falls back to the sequential per-client loop.
     batched_local_fit: Optional[Callable] = None
+    # --- scenario-plane API (the grid engine's hot path) -----------------
+    # plan_fit(clients, steps, rng) -> per-client batch plans. Consumes
+    # ``rng`` exactly like batched_local_fit's drawing phase, so a caller
+    # can split "draw plans" from "run rows" without moving the stream.
+    plan_fit: Optional[Callable] = None
+    # plan_digest(client, plan) -> hashable fingerprint of the training
+    # inputs a (client, plan) row contributes; two rows with equal digests
+    # and equal anchors compute identical deltas (coalescing key).
+    plan_digest: Optional[Callable] = None
+    # fit_rows(anchors, rows, steps, mus, use_prox) ->
+    #     (plane_delta [Rb,...], n_examples [R], metrics [R]) where
+    # anchors is a list of R per-row params pytrees, rows is a list of R
+    # (client, plan) pairs, mus is a list of R prox coefficients, and Rb is
+    # R padded up to a bucket width (callers slice/gather the rows they
+    # own). One fused dispatch per call (chunked past _UNROLL_LIMIT steps).
+    fit_rows: Optional[Callable] = None
+
+    def plane_dispatch_widths(self) -> List[int]:
+        """Padded row widths of every plane dispatch so far (test/bench
+        introspection for compile-cache bucketing)."""
+        runner = getattr(self.fit_rows, "runner", None)
+        return list(runner.dispatch_widths) if runner is not None else []
 
 
-_UNROLL_LIMIT = 16  # local steps fused into one program before falling back
+_UNROLL_LIMIT = 16  # local steps fused into one program before chunking
+_CHUNK_STEPS = 8  # fused block size for long local epochs (compile-bounded)
+
+# Row-bucket ladder: plane dispatches pad their row count up to the next
+# bucket so chaos-variable cohort sizes compile O(buckets) programs instead
+# of O(distinct sizes). Padding rows are discarded; row independence means
+# they cannot perturb real rows.
+_ROW_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128)
 
 
-def _batched_sgd_runner(cohort_loss_fn, lr: float):
-    """jit'd cohort runner: the whole cohort's local SGD as stacked tensor
-    programs — one dispatch per round, no per-client Python loop.
+def bucket_rows(n: int) -> int:
+    """Smallest bucket width >= n (multiples of 64 past the ladder)."""
+    for b in _ROW_BUCKETS:
+        if n <= b:
+            return b
+    return -(-n // 64) * 64
 
-    ``cohort_loss_fn(stacked_params, batch)`` must return per-client losses
-    [C] plus a dict of per-client metric arrays, where every params leaf and
-    batch leaf carries a leading client axis C. Summing the per-client
-    losses before differentiation yields each client's own gradient in its
-    slice (clients share no parameters), so one value_and_grad drives C
-    independent SGD trajectories. Clipping is per-client
-    (clip_by_global_norm_stacked); the momentum update is leaf-wise and
-    vectorizes over the stacked axis unchanged.
+
+def _plane_sgd_runner(cohort_loss_fn, lr: float):
+    """jit'd plane runner: R independent local-SGD trajectories as stacked
+    tensor programs — one fused dispatch per call, no per-row Python loop.
+
+    ``cohort_loss_fn(stacked_params, batch)`` must return per-row losses
+    [R] plus a dict of per-row metric arrays, where every params leaf and
+    batch leaf carries a leading row axis R. Summing the per-row losses
+    before differentiation yields each row's own gradient in its slice
+    (rows share no parameters), so one value_and_grad drives R independent
+    SGD trajectories. The anchor carries the same leading row axis (each
+    row may start from different global params — the grid engine mixes
+    sweep points in one plane); ``mu`` is a per-row prox coefficient.
+    Clipping is per-row (clip_by_global_norm_stacked); the momentum update
+    is leaf-wise and vectorizes over the stacked axis unchanged.
 
     Lowering notes (CPU-measured, see benchmarks/round_engine_bench.py):
     jax.lax.scan over steps and vmap'd lax.conv both lower catastrophically
@@ -70,8 +119,9 @@ def _batched_sgd_runner(cohort_loss_fn, lr: float):
     while loop), so local steps are UNROLLED at trace time into one fused
     program — XLA then aliases the params/momentum buffers across steps
     instead of round-tripping ~100 MB per step through fresh allocations.
-    Beyond _UNROLL_LIMIT steps a donated per-step jit keeps the same buffer
-    reuse with bounded compile time.
+    Beyond _UNROLL_LIMIT steps the unroll is CHUNKED: donated fused blocks
+    of _CHUNK_STEPS steps keep the same buffer reuse with compile time
+    bounded at two programs (full chunk + remainder) for any epoch length.
     """
     opt = sgd(lr, momentum=0.9)
 
@@ -82,7 +132,7 @@ def _batched_sgd_runner(cohort_loss_fn, lr: float):
                 prox = sum(
                     jnp.sum(
                         jnp.square(
-                            l.astype(jnp.float32) - a.astype(jnp.float32)[None]
+                            l.astype(jnp.float32) - a.astype(jnp.float32)
                         ),
                         axis=tuple(range(1, l.ndim)),
                     )
@@ -98,8 +148,7 @@ def _batched_sgd_runner(cohort_loss_fn, lr: float):
 
     @functools.partial(jax.jit, static_argnames=("use_prox", "steps"))
     def fit_fused(anchor, batches, mu, use_prox, steps):
-        c = jax.tree.leaves(batches)[0].shape[0]
-        stacked = tree_broadcast_leading(anchor, c)
+        stacked = anchor
         opt_state = opt.init(stacked)
         metrics = {}
         for s in range(steps):
@@ -107,45 +156,71 @@ def _batched_sgd_runner(cohort_loss_fn, lr: float):
             stacked, opt_state, metrics = step_body(
                 stacked, opt_state, batch, anchor, mu, use_prox
             )
-        delta = jax.tree.map(lambda sp, a: sp - a[None], stacked, anchor)
+        delta = jax.tree.map(jnp.subtract, stacked, anchor)
         return delta, metrics
 
     @functools.partial(
-        jax.jit, static_argnames=("use_prox",), donate_argnums=(0, 1)
+        jax.jit, static_argnames=("use_prox", "chunk"), donate_argnums=(0, 1)
     )
-    def step_donated(stacked, opt_state, batch, anchor, mu, use_prox):
-        return step_body(stacked, opt_state, batch, anchor, mu, use_prox)
+    def run_chunk(stacked, opt_state, batches, anchor, mu, use_prox, chunk):
+        metrics = {}
+        for s in range(chunk):
+            batch = jax.tree.map(lambda l: l[:, s], batches)
+            stacked, opt_state, metrics = step_body(
+                stacked, opt_state, batch, anchor, mu, use_prox
+            )
+        return stacked, opt_state, metrics
 
-    @functools.partial(jax.jit, static_argnames=("c",))
-    def init_state(anchor, c):
-        stacked = tree_broadcast_leading(anchor, c)
-        return stacked, opt.init(stacked)
+    @jax.jit
+    def init_state(anchor):
+        # fresh buffers: the chunk loop donates its carry, the anchor must
+        # survive for the prox term and the final delta
+        return jax.tree.map(jnp.copy, anchor), opt.init(anchor)
 
     @jax.jit
     def finalize(stacked, anchor):
-        return jax.tree.map(lambda sp, a: sp - a[None], stacked, anchor)
+        return jax.tree.map(jnp.subtract, stacked, anchor)
 
-    def run_cohort(anchor, batches, mu, use_prox):
-        # batches: pytree with leaves [C, steps, ...]
+    def run_rows(anchor, batches, mu, use_prox):
+        # anchor: pytree with leaves [R, ...]; batches: leaves [R, steps, ...]
         leaves = jax.tree.leaves(batches)
-        c, steps = leaves[0].shape[:2]
+        r, steps = leaves[0].shape[:2]
+        run_rows.dispatch_widths.append(int(r))
         if steps <= _UNROLL_LIMIT:
             return fit_fused(anchor, batches, mu, use_prox, steps)
-        stacked, opt_state = init_state(anchor, c)
+        stacked, opt_state = init_state(anchor)
         metrics = {}
-        for s in range(steps):
-            batch = jax.tree.map(lambda l: l[:, s], batches)
-            stacked, opt_state, metrics = step_donated(
-                stacked, opt_state, batch, anchor, mu, use_prox
+        s = 0
+        while s < steps:
+            chunk = min(_CHUNK_STEPS, steps - s)
+            block = jax.tree.map(lambda l: l[:, s : s + chunk], batches)
+            stacked, opt_state, metrics = run_chunk(
+                stacked, opt_state, block, anchor, mu, use_prox, chunk
             )
+            s += chunk
         return finalize(stacked, anchor), metrics
 
-    return run_cohort
+    run_rows.dispatch_widths = []
+    return run_rows
 
 
 def _unstack_metrics(stacked: Dict[str, Any], n: int) -> List[Dict[str, float]]:
     host = {k: np.asarray(v) for k, v in stacked.items()}  # one sync per metric
     return [{k: float(v[i]) for k, v in host.items()} for i in range(n)]
+
+
+def _pad_rows(anchors: Sequence[Any], rows: Sequence[Any], mus: Sequence[float]):
+    """Pad a row list up to its bucket width by repeating row 0 (results
+    for padding rows are computed and discarded; row independence keeps
+    them from touching real rows)."""
+    r = len(rows)
+    rb = bucket_rows(r)
+    pad = rb - r
+    return (
+        list(anchors) + [anchors[0]] * pad,
+        list(rows) + [rows[0]] * pad,
+        list(mus) + [float(mus[0])] * pad,
+    )
 
 
 def _sgd_local_fit(loss_fn, lr: float, batch_size: int):
@@ -187,8 +262,45 @@ def _sgd_local_fit(loss_fn, lr: float, batch_size: int):
     return fit
 
 
-def _sgd_batched_local_fit(cohort_loss_fn, lr: float, batch_size: int):
-    runner = _batched_sgd_runner(cohort_loss_fn, lr)
+def _sgd_plane_fns(cohort_loss_fn, lr: float, batch_size: int):
+    """MNIST-style plane fns: batch plans are index arrays into the
+    client's shard; rows gather their step batches from dataset arrays."""
+    runner = _plane_sgd_runner(cohort_loss_fn, lr)
+
+    def plan_fit(clients: List["EdgeClient"], steps: int, rng: np.random.Generator):
+        # plans drawn per client IN ORDER: same rng stream as the
+        # sequential path pulling `steps` batches per client.
+        return [c.dataset.batch_indices(batch_size, steps, rng=rng) for c in clients]
+
+    def plan_digest(client: "EdgeClient", plan: np.ndarray):
+        return (id(client.dataset), plan.tobytes())
+
+    def fit_rows(anchors, rows, steps, mus, use_prox):
+        r = len(rows)
+        anchors_p, rows_p, mus_p = _pad_rows(anchors, rows, mus)
+        batches = {
+            "images": jnp.asarray(
+                np.stack([c.dataset.images[p] for c, p in rows_p])
+            ),
+            "labels": jnp.asarray(
+                np.stack([c.dataset.labels[p] for c, p in rows_p])
+            ),
+        }
+        plane, last = runner(
+            tree_stack(anchors_p),
+            batches,
+            jnp.asarray(np.asarray(mus_p, np.float32)),
+            use_prox,
+        )
+        return plane, [steps * batch_size] * r, _unstack_metrics(last, r)
+
+    fit_rows.runner = runner
+    return plan_fit, plan_digest, fit_rows
+
+
+def _plane_batched_local_fit(plan_fit, fit_rows):
+    """Default cohort-batched fit on top of the plane API: every row shares
+    the cohort's single anchor; the plane is sliced back to cohort width."""
 
     def fit_cohort(
         params,
@@ -197,20 +309,13 @@ def _sgd_batched_local_fit(cohort_loss_fn, lr: float, batch_size: int):
         rng: np.random.Generator,
         prox_mu: float,
     ):
-        # batch plans drawn per client IN ORDER: same rng stream as the
-        # sequential path pulling `steps` batches per client.
-        plans = [c.dataset.batch_indices(batch_size, steps, rng=rng) for c in clients]
-        batches = {
-            "images": jnp.asarray(
-                np.stack([c.dataset.images[p] for c, p in zip(clients, plans)])
-            ),
-            "labels": jnp.asarray(
-                np.stack([c.dataset.labels[p] for c, p in zip(clients, plans)])
-            ),
-        }
-        deltas, last = runner(params, batches, jnp.float32(prox_mu), prox_mu > 0)
-        n_examples = [steps * batch_size] * len(clients)
-        return deltas, n_examples, _unstack_metrics(last, len(clients))
+        plans = plan_fit(clients, steps, rng)
+        rows = list(zip(clients, plans))
+        plane, n_examples, metrics = fit_rows(
+            [params] * len(rows), rows, steps, [prox_mu] * len(rows), prox_mu > 0
+        )
+        stacked = jax.tree.map(lambda l: l[: len(rows)], plane)
+        return stacked, n_examples, metrics
 
     return fit_cohort
 
@@ -233,13 +338,17 @@ def mnist_cnn_task(lr: float = 0.05, batch_size: int = 32) -> LocalTask:
         acc, nll = ev(params, jnp.asarray(data["images"]), jnp.asarray(data["labels"]))
         return {"accuracy": float(acc), "loss": float(nll)}
 
+    plan_fit, plan_digest, fit_rows = _sgd_plane_fns(cnn_loss_stacked, lr, batch_size)
     return LocalTask(
         "mnist_cnn",
         init_fn=cnn_init,
         local_fit=_sgd_local_fit(cnn_loss, lr, batch_size),
         evaluate=evaluate,
         update_bytes=nbytes,
-        batched_local_fit=_sgd_batched_local_fit(cnn_loss_stacked, lr, batch_size),
+        batched_local_fit=_plane_batched_local_fit(plan_fit, fit_rows),
+        plan_fit=plan_fit,
+        plan_digest=plan_digest,
+        fit_rows=fit_rows,
     )
 
 
@@ -292,33 +401,51 @@ def lm_task(cfg, lr: float = 1e-3, batch_size: int = 4, seq: int = 64) -> LocalT
         losses, metrics = jax.vmap(loss_fn)(ps, batch)
         return losses, metrics
 
-    runner = _batched_sgd_runner(cohort_loss, lr)
+    runner = _plane_sgd_runner(cohort_loss, lr)
 
-    def fit_cohort(params, clients, steps, rng, prox_mu):
+    def plan_fit(clients, steps, rng):
         # same seed draws, same order as the sequential fit loop
-        per_client = []
-        for c in clients:
+        return [
+            [int(rng.integers(0, 2**31)) for _ in range(steps)] for _ in clients
+        ]
+
+    def plan_digest(client, plan):
+        return (client.client_id, tuple(plan))
+
+    def fit_rows(anchors, rows, steps, mus, use_prox):
+        r = len(rows)
+        anchors_p, rows_p, mus_p = _pad_rows(anchors, rows, mus)
+        per_row = []
+        for c, plan in rows_p:
             bs = [
                 token_batch_for(
-                    cfg, batch=batch_size, seq=seq,
-                    seed=int(rng.integers(0, 2**31)), client_id=c.client_id,
+                    cfg, batch=batch_size, seq=seq, seed=s, client_id=c.client_id
                 )
-                for _ in range(steps)
+                for s in plan
             ]
-            per_client.append({k: np.stack([b[k] for b in bs]) for k in bs[0]})
+            per_row.append({k: np.stack([b[k] for b in bs]) for k in bs[0]})
         batches = {
-            k: jnp.asarray(np.stack([pc[k] for pc in per_client]))
-            for k in per_client[0]
+            k: jnp.asarray(np.stack([pr[k] for pr in per_row]))
+            for k in per_row[0]
         }
-        deltas, last = runner(params, batches, jnp.float32(0.0), False)
-        n_examples = [steps * batch_size] * len(clients)
-        return deltas, n_examples, _unstack_metrics(last, len(clients))
+        plane, last = runner(
+            tree_stack(anchors_p),
+            batches,
+            jnp.asarray(np.asarray(mus_p, np.float32)),
+            use_prox,
+        )
+        return plane, [steps * batch_size] * r, _unstack_metrics(last, r)
+
+    fit_rows.runner = runner
 
     params_t = model.abstract_params()
     nbytes = sum(int(np.prod(p.shape)) * 4 for p in jax.tree.leaves(params_t))
     return LocalTask(
         f"lm_{cfg.name}", model.init, fit, evaluate, nbytes,
-        batched_local_fit=fit_cohort,
+        batched_local_fit=_plane_batched_local_fit(plan_fit, fit_rows),
+        plan_fit=plan_fit,
+        plan_digest=plan_digest,
+        fit_rows=fit_rows,
     )
 
 

@@ -1,0 +1,287 @@
+"""Scenario-parallel sweep engine: whole characterization grids as one
+vectorized plane.
+
+The paper's contribution is a *characterization methodology* — grids over
+one-way delay, packet loss, and client dropout (Fig. 3-5, Table III).
+``run_fl_grid`` evaluates every sweep point of such a grid concurrently:
+per round, each point's cohort selection and transport sampling run on the
+point's OWN seeded RNG stream (exactly as a per-point ``FederatedServer``
+run would consume it), then the union of all points' local-training rows
+— one row per (global params, client, batch plan) — executes as one fused
+plane dispatch through ``LocalTask.fit_rows``.
+
+Two properties make grid results exactly reproduce per-point runs at a
+fixed seed:
+
+1. *Row independence.* Every cross-row operation in the plane program is
+   batch-mapped, never reduced, so a row's delta is bitwise identical no
+   matter how rows are grouped, ordered, or padded into dispatches (see
+   ``repro.core.client._plane_sgd_runner``). Both engines share the same
+   bucketed program family, so there is no loop-vs-vmap numerics gap.
+2. *Stream discipline.* The grid driver drives each point through the same
+   ``begin_round``/``finish_round`` code the per-point engine runs, with a
+   per-point ``np.random.Generator``; only the local-fit execution is
+   hoisted into the shared plane.
+
+On top of exactness, the engine exploits the defining redundancy of
+characterization sweeps: at a fixed seed, many points share identical
+training trajectories (a latency grid changes the *clock*, not the
+*gradients*, wherever every client still delivers). Rows are therefore
+COALESCED by a parameter-provenance key — (anchor provenance, batch-plan
+digest, steps, mu) — so shared trajectories are computed once per round,
+and eval is memoized on the same provenance. Points diverge (different
+deliveries, different aggregation) and their rows automatically stop
+coalescing; correctness never depends on the sweep's structure.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chaos import ChaosSchedule
+from repro.core.client import EdgeClient, LocalTask
+from repro.core.server import FederatedServer, History, ServerConfig
+from repro.core.strategy import Strategy
+from repro.transport import TcpParams
+
+
+@dataclass
+class GridPoint:
+    """One sweep point: the arguments a per-point FederatedServer takes.
+
+    ``clients`` must be fresh EdgeClient objects per point (connection and
+    participation state is per-point), but their ``dataset`` objects should
+    be SHARED across points wherever the underlying shards are identical —
+    row coalescing keys on dataset identity."""
+
+    clients: List[EdgeClient]
+    strategy: Strategy
+    tcp: TcpParams
+    chaos: ChaosSchedule
+    config: ServerConfig
+    compressor: Optional[Any] = None
+    name: str = ""
+
+
+@dataclass
+class GridStats:
+    """Plane/coalescing telemetry for one grid run."""
+
+    rounds: int = 0  # lockstep rounds with at least one plane row
+    fit_rows_total: int = 0  # rows requested across all points
+    fit_rows_unique: int = 0  # rows actually dispatched (pre-padding)
+    plane_dispatches: int = 0
+    evals_requested: int = 0
+    evals_computed: int = 0
+
+
+@dataclass
+class GridResult:
+    histories: List[History]
+    stats: GridStats
+    servers: List[FederatedServer]  # post-run per-point state (inspection)
+
+
+def _gather_rows(planes, chunk: int, idxs: List[int]):
+    """Collect plane rows ``idxs`` (global row numbers, delivery order)
+    from per-chunk plane outputs. Returns (stacked [D,...], n_ex, metrics).
+
+    Row order is preserved exactly: aggregation reduces over the client
+    axis, so the stacked deltas must line up with the per-point engine's
+    delivery order for bit-identical weighted means."""
+    segments: List[List[int]] = [[idxs[0]]]
+    for k in idxs[1:]:
+        if k // chunk == segments[-1][-1] // chunk:
+            segments[-1].append(k)
+        else:
+            segments.append([k])
+    trees, n_out, m_out = [], [], []
+    for seg in segments:
+        ci = seg[0] // chunk
+        plane, n_ex, mets = planes[ci]
+        lis = [k - ci * chunk for k in seg]
+        trees.append(jax.tree.map(lambda l: l[np.asarray(lis)], plane))
+        n_out += [n_ex[li] for li in lis]
+        m_out += [mets[li] for li in lis]
+    if len(trees) == 1:
+        return trees[0], n_out, m_out
+    stacked = jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *trees)
+    return stacked, n_out, m_out
+
+
+def run_fl_grid(
+    task: LocalTask,
+    points: Sequence[GridPoint],
+    *,
+    eval_data: Optional[Dict[str, np.ndarray]] = None,
+    coalesce: bool = True,
+    max_plane_rows: int = 64,
+) -> GridResult:
+    """Run every sweep point of a characterization grid in lockstep.
+
+    Returns per-point ``History`` objects identical (bitwise, at a fixed
+    seed) to running each point through ``FederatedServer.run`` with
+    ``batched=True``. ``max_plane_rows`` caps one dispatch's row count
+    (anchor stacking is O(rows x params); 64 rows of the MNIST CNN is
+    ~100 MB of anchors)."""
+    stats = GridStats()
+    nonce = itertools.count()
+    interned: Dict[Any, int] = {}
+
+    def intern(key) -> int:
+        v = interned.get(key)
+        if v is None:
+            v = len(interned)
+            interned[key] = v
+        return v
+
+    # params provenance per point: equal keys => bitwise-equal global
+    # params (same init, same aggregation chain over the same rows)
+    params_keys: List[int] = []
+    eval_cache: Dict[Tuple[int, int], Dict[str, float]] = {}
+    servers: List[FederatedServer] = []
+
+    def make_eval(i: int):
+        def _eval(params, data):
+            stats.evals_requested += 1
+            key = (params_keys[i], id(data))
+            hit = eval_cache.get(key)
+            if hit is None:
+                hit = task.evaluate(params, data)
+                eval_cache[key] = hit
+                stats.evals_computed += 1
+            return dict(hit)  # finish_round annotates the dict in place
+
+        return _eval
+
+    for i, p in enumerate(points):
+        servers.append(
+            FederatedServer(
+                task,
+                p.clients,
+                p.strategy,
+                tcp=p.tcp,
+                chaos=p.chaos,
+                config=p.config,
+                compressor=p.compressor,
+                eval_data=eval_data,
+                eval_fn=make_eval(i),
+            )
+        )
+        params_keys.append(intern(("init", id(task), p.config.seed)))
+
+    plane_ok = (
+        task.plan_fit is not None
+        and task.fit_rows is not None
+        and task.plan_digest is not None
+    )
+    max_rounds = max((p.config.rounds for p in points), default=0)
+
+    for rnd in range(max_rounds):
+        # --- per-point pre phase: selection + transport on the point's own
+        # RNG stream; collect plane work orders ------------------------------
+        pending = []  # (point_idx, FitJob, plans)
+        for i, srv in enumerate(servers):
+            if srv.terminated or rnd >= srv.config.rounds:
+                continue
+            job = srv.begin_round(rnd)
+            if job is None:
+                continue
+            if not (plane_ok and srv.config.batched):
+                # no plane path for this point/task: run it standalone
+                stacked, deltas, weights, per_metrics = srv.execute_fit(job)
+                params_keys[i] = intern(("opaque", next(nonce)))
+                srv.finish_round(job, stacked, deltas, weights, per_metrics)
+                continue
+            plans = task.plan_fit(job.clients, job.steps, srv.rng)
+            pending.append((i, job, plans))
+        if not pending:
+            continue
+        stats.rounds += 1
+
+        # --- row table: coalesce identical rows across points ---------------
+        # groups keyed by the plane program's static axes (steps, use_prox)
+        groups: Dict[tuple, dict] = {}
+        placements = []  # (point_idx, job, group_key, row idxs, row keys)
+        for i, job, plans in pending:
+            mu = float(job.prox_mu)
+            gkey = (job.steps, mu > 0)
+            g = groups.setdefault(
+                gkey, {"index": {}, "anchors": [], "rows": [], "mus": []}
+            )
+            idxs, row_keys = [], []
+            for client, plan in zip(job.clients, plans):
+                stats.fit_rows_total += 1
+                if coalesce:
+                    rkey = (
+                        params_keys[i],
+                        task.plan_digest(client, plan),
+                        job.steps,
+                        mu,
+                    )
+                else:
+                    rkey = ("row", next(nonce))
+                j = g["index"].get(rkey)
+                if j is None:
+                    j = len(g["rows"])
+                    g["index"][rkey] = j
+                    g["anchors"].append(servers[i].global_params)
+                    g["rows"].append((client, plan))
+                    g["mus"].append(mu)
+                idxs.append(j)
+                row_keys.append(intern(rkey))
+            placements.append((i, job, gkey, idxs, row_keys))
+
+        # --- plane dispatch: one fused program per group chunk --------------
+        for gkey, g in groups.items():
+            steps, use_prox = gkey
+            rows = g["rows"]
+            stats.fit_rows_unique += len(rows)
+            planes = []
+            for s in range(0, len(rows), max_plane_rows):
+                sub = slice(s, s + max_plane_rows)
+                plane, n_ex, mets = task.fit_rows(
+                    g["anchors"][sub], rows[sub], steps, g["mus"][sub], use_prox
+                )
+                planes.append((plane, n_ex, mets))
+                stats.plane_dispatches += 1
+            g["planes"] = planes
+
+        # --- per-point post phase: scatter, aggregate, advance provenance ---
+        for i, job, gkey, idxs, row_keys in placements:
+            srv = servers[i]
+            stacked, weights, per_metrics = _gather_rows(
+                groups[gkey]["planes"], max_plane_rows, idxs
+            )
+            sharable = (
+                coalesce
+                and srv.compressor.name == "none"
+                and bool(srv.strategy.agg_fingerprint)
+            )
+            if sharable:
+                digest = (
+                    "agg",
+                    params_keys[i],
+                    srv.strategy.agg_fingerprint,
+                    tuple(row_keys),
+                    tuple(weights),
+                    rnd,
+                    bool(srv.config.batched),
+                    (
+                        ("async", tuple(job.arrivals), srv.config.staleness_alpha)
+                        if srv.config.async_mode
+                        else None
+                    ),
+                )
+                params_keys[i] = intern(digest)
+            else:
+                params_keys[i] = intern(("opaque", next(nonce)))
+            srv.finish_round(job, stacked, None, weights, per_metrics)
+
+    return GridResult([s.history for s in servers], stats, servers)

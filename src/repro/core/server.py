@@ -85,6 +85,23 @@ class History:
 
 
 @dataclass
+class FitJob:
+    """Work order for one scenario-round's local training, produced by
+    ``FederatedServer.begin_round`` and consumed by ``finish_round``. The
+    grid engine collects FitJobs across sweep points and executes their
+    union as one plane dispatch; the per-point ``run`` loop executes them
+    one at a time."""
+
+    rnd: int
+    record: RoundRecord
+    clients: List[EdgeClient]  # delivering clients, delivery order
+    arrivals: List[float]
+    payload_bytes: int
+    steps: int
+    prox_mu: float
+
+
+@dataclass
 class ServerConfig:
     rounds: int = 20
     clients_per_round: float = 1.0  # fraction of live clients selected
@@ -130,6 +147,7 @@ class FederatedServer:
         config: ServerConfig,
         compressor: Optional[Compressor] = None,
         eval_data: Optional[Dict[str, np.ndarray]] = None,
+        eval_fn: Optional[Any] = None,
     ):
         self.task = task
         self.clients = clients
@@ -139,11 +157,18 @@ class FederatedServer:
         self.config = config
         self.compressor = compressor or none_compressor()
         self.eval_data = eval_data
+        # eval hook: the grid engine injects a provenance-memoized wrapper
+        # so sweep points sharing a trajectory evaluate once
+        self._evaluate = eval_fn or task.evaluate
         self.rng = np.random.default_rng(config.seed)
         import jax
 
         self.global_params = task.init_fn(jax.random.PRNGKey(config.seed))
         self.history = History()
+        # round state-machine position (begin_round/finish_round advance it)
+        self.sim_time = 0.0
+        self.consecutive_failures = 0
+        self.terminated = False
 
     # ------------------------------------------------------------------
     def _client_transport(
@@ -221,160 +246,182 @@ class FederatedServer:
         return completed, times, np.array([o.reconnects for o in outs])
 
     # ------------------------------------------------------------------
-    def run(self) -> History:
+    def _fail_round(self, record: RoundRecord) -> None:
+        self.sim_time += self.config.round_deadline
+        record.t_end = self.sim_time
+        record.failed_round = True
+        self.history.rounds.append(record)
+        self.consecutive_failures += 1
+        if self.consecutive_failures >= self.config.max_consecutive_failures:
+            self.terminated = True
+
+    def begin_round(self, rnd: int) -> Optional[FitJob]:
+        """Liveness, cohort selection, transport, quorum. Returns a FitJob
+        when local training should run, or None for a failed round (already
+        recorded; ``terminated`` is set when the failure budget is spent)."""
         cfg = self.config
-        t = 0.0
-        consecutive_failures = 0
-        for rnd in range(cfg.rounds):
-            live = [c for c in self.clients if self.chaos.alive(t, c.client_id)]
-            n_total = len(self.clients)
-            quorum = self.strategy.quorum(n_total)
-            record = RoundRecord(rnd, t, t, 0, 0, False, 0.0)
+        t = self.sim_time
+        live = [c for c in self.clients if self.chaos.alive(t, c.client_id)]
+        n_total = len(self.clients)
+        quorum = self.strategy.quorum(n_total)
+        record = RoundRecord(rnd, t, t, 0, 0, False, 0.0)
 
-            if len(live) < quorum:
-                # Flower blocks until min_fit clients are available; account
-                # the wait as a failed round of deadline length.
-                t += cfg.round_deadline
-                record.t_end = t
-                record.failed_round = True
-                self.history.rounds.append(record)
-                consecutive_failures += 1
-                if consecutive_failures >= cfg.max_consecutive_failures:
-                    break
-                continue
+        if len(live) < quorum:
+            # Flower blocks until min_fit clients are available; account
+            # the wait as a failed round of deadline length.
+            self._fail_round(record)
+            return None
 
-            k = max(quorum, int(round(cfg.clients_per_round * len(live))))
-            k = min(int(round(k * max(cfg.over_provision, 1.0))), len(live))
-            idx = self.rng.choice(len(live), size=k, replace=False)
-            cohort = [live[i] for i in idx]
-            record.selected = k
+        k = max(quorum, int(round(cfg.clients_per_round * len(live))))
+        k = min(int(round(k * max(cfg.over_provision, 1.0))), len(live))
+        idx = self.rng.choice(len(live), size=k, replace=False)
+        cohort = [live[i] for i in idx]
+        record.selected = k
 
-            deliveries = []
-            payload_bytes = self.compressor.wire_bytes(self.global_params)
-            if cfg.batched:
-                completed, ctimes, recon = self._cohort_transport(cohort, t, payload_bytes)
-                record.reconnects += float(np.sum(recon))
-                for client, done, ct in zip(cohort, completed, ctimes):
-                    client.connected = bool(done)  # failed exchange leaves conn dead
-                    if done and ct <= cfg.round_deadline:
-                        deliveries.append((client, float(ct)))
-            else:
-                for client in cohort:
-                    link = self.chaos.link_at(t, client.client_id)
-                    if client.link_override is not None:
-                        link = client.link_override
-                    local_time = cfg.local_steps * client.step_time(cfg.base_step_cost)
-                    done, ct, rc = self._client_transport(client, link, local_time, payload_bytes)
-                    record.reconnects += rc
-                    client.connected = done  # failed exchange leaves conn dead
-                    if done and ct <= cfg.round_deadline:
-                        deliveries.append((client, ct))
+        deliveries = []
+        payload_bytes = self.compressor.wire_bytes(self.global_params)
+        if cfg.batched:
+            completed, ctimes, recon = self._cohort_transport(cohort, t, payload_bytes)
+            record.reconnects += float(np.sum(recon))
+            for client, done, ct in zip(cohort, completed, ctimes):
+                client.connected = bool(done)  # failed exchange leaves conn dead
+                if done and ct <= cfg.round_deadline:
+                    deliveries.append((client, float(ct)))
+        else:
+            for client in cohort:
+                link = self.chaos.link_at(t, client.client_id)
+                if client.link_override is not None:
+                    link = client.link_override
+                local_time = cfg.local_steps * client.step_time(cfg.base_step_cost)
+                done, ct, rc = self._client_transport(client, link, local_time, payload_bytes)
+                record.reconnects += rc
+                client.connected = done  # failed exchange leaves conn dead
+                if done and ct <= cfg.round_deadline:
+                    deliveries.append((client, ct))
 
-            # straggler mitigation: close the round once the fastest
-            # quorum_close_fraction of the over-provisioned cohort arrived
-            if cfg.quorum_close_fraction < 1.0 and len(deliveries) > quorum:
-                deliveries.sort(key=lambda d: d[1])
-                keep = max(quorum, int(len(deliveries) * cfg.quorum_close_fraction))
-                deliveries = deliveries[:keep]
+        # straggler mitigation: close the round once the fastest
+        # quorum_close_fraction of the over-provisioned cohort arrived
+        if cfg.quorum_close_fraction < 1.0 and len(deliveries) > quorum:
+            deliveries.sort(key=lambda d: d[1])
+            keep = max(quorum, int(len(deliveries) * cfg.quorum_close_fraction))
+            deliveries = deliveries[:keep]
 
-            record.delivered = len(deliveries)
-            if len(deliveries) < quorum:
-                t += cfg.round_deadline
-                record.t_end = t
-                record.failed_round = True
-                self.history.rounds.append(record)
-                consecutive_failures += 1
-                if consecutive_failures >= cfg.max_consecutive_failures:
-                    break
-                continue
-            consecutive_failures = 0
+        record.delivered = len(deliveries)
+        if len(deliveries) < quorum:
+            self._fail_round(record)
+            return None
+        self.consecutive_failures = 0
+        return FitJob(
+            rnd=rnd,
+            record=record,
+            clients=[client for client, _ in deliveries],
+            arrivals=[ct for _, ct in deliveries],
+            payload_bytes=payload_bytes,
+            steps=cfg.local_steps,
+            prox_mu=self.strategy.prox_mu,
+        )
 
-            # real local training only for delivering clients
-            dclients = [client for client, _ in deliveries]
-            arrivals = [ct for _, ct in deliveries]
-            stacked = None  # stacked deltas [C, ...] when the batched fit ran
-            deltas: List[Any] = []
-            if cfg.batched and self.task.batched_local_fit is not None:
-                # one vmapped dispatch for the whole cohort's local SGD
-                stacked, weights, per_metrics = self.task.batched_local_fit(
-                    self.global_params,
-                    dclients,
-                    cfg.local_steps,
-                    self.rng,
-                    self.strategy.prox_mu,
+    def execute_fit(self, job: FitJob):
+        """Per-point local training for one FitJob: one plane dispatch for
+        the cohort (batched) or the sequential per-client loop. Returns
+        (stacked [C,...] or None, deltas list, weights, per_metrics)."""
+        cfg = self.config
+        stacked = None  # stacked deltas [C, ...] when the batched fit ran
+        deltas: List[Any] = []
+        if cfg.batched and self.task.batched_local_fit is not None:
+            stacked, weights, per_metrics = self.task.batched_local_fit(
+                self.global_params,
+                job.clients,
+                job.steps,
+                self.rng,
+                job.prox_mu,
+            )
+            weights = list(weights)
+        else:
+            weights, per_metrics = [], []
+            for client in job.clients:
+                delta, n_ex, m = self.task.local_fit(
+                    self.global_params, client, job.steps, self.rng, job.prox_mu
                 )
-                weights = list(weights)
-            else:
-                weights, per_metrics = [], []
-                for client in dclients:
-                    delta, n_ex, m = self.task.local_fit(
-                        self.global_params,
-                        client,
-                        cfg.local_steps,
-                        self.rng,
-                        self.strategy.prox_mu,
-                    )
-                    deltas.append(delta)
-                    weights.append(n_ex)
-                    per_metrics.append(m)
+                deltas.append(delta)
+                weights.append(n_ex)
+                per_metrics.append(m)
+        return stacked, deltas, weights, per_metrics
 
-            # compression: error feedback is per-client state, so any real
-            # compressor unstacks the cohort; the wire-identity "none"
-            # compressor keeps the stacked hot path intact.
-            if self.compressor.name != "none":
-                if stacked is not None:
-                    deltas = tree_unstack(stacked)
-                    stacked = None
-                compressed = []
-                for client, delta in zip(dclients, deltas):
-                    payload, client.residual = self.compressor.compress(delta, client.residual)
-                    compressed.append(self.compressor.decompress(payload))
-                deltas = compressed
+    def finish_round(self, job: FitJob, stacked, deltas, weights, per_metrics) -> None:
+        """Compression, bookkeeping, aggregation, clock advance, eval."""
+        cfg = self.config
+        rnd = job.rnd
+        record = job.record
+        dclients = job.clients
+        arrivals = job.arrivals
 
-            for client, m in zip(dclients, per_metrics):
-                client.rounds_participated += 1
-                client.bytes_sent += payload_bytes
-                record.metrics.update({f"client_{client.client_id}_{k}": v for k, v in m.items()})
+        # compression: error feedback is per-client state, so any real
+        # compressor unstacks the cohort; the wire-identity "none"
+        # compressor keeps the stacked hot path intact.
+        if self.compressor.name != "none":
+            if stacked is not None:
+                deltas = tree_unstack(stacked)
+                stacked = None
+            compressed = []
+            for client, delta in zip(dclients, deltas):
+                payload, client.residual = self.compressor.compress(delta, client.residual)
+                compressed.append(self.compressor.decompress(payload))
+            deltas = compressed
 
-            if cfg.async_mode:
-                # arrival-ordered asynchronous application (paper SecII):
-                # each update lands as it arrives, down-weighted by its
-                # staleness relative to the round's first arrival
-                if stacked is not None:
-                    deltas = tree_unstack(stacked)
-                    stacked = None
-                order = np.argsort(arrivals)
-                t0_arr = arrivals[order[0]]
-                for j in order:
-                    stale = max(arrivals[j] - t0_arr, 0.0)
-                    w = (1.0 + stale) ** (-cfg.staleness_alpha)
-                    upd = jax.tree.map(lambda d: d * w, deltas[j])
-                    self.global_params = self.strategy.aggregate(
-                        self.global_params, [upd], [weights[j]], rnd
-                    )
-            elif cfg.batched:
-                # stacked-delta fast path: kernel-backed reduction (falls
-                # back to the list path inside aggregate_stacked when the
-                # strategy has no stacked twin)
-                if stacked is None:
-                    stacked = tree_stack(deltas)
-                self.global_params = self.strategy.aggregate_stacked(
-                    self.global_params, stacked, weights, rnd
-                )
-            else:
+        for client, m in zip(dclients, per_metrics):
+            client.rounds_participated += 1
+            client.bytes_sent += job.payload_bytes
+            record.metrics.update({f"client_{client.client_id}_{k}": v for k, v in m.items()})
+
+        if cfg.async_mode:
+            # arrival-ordered asynchronous application (paper SecII):
+            # each update lands as it arrives, down-weighted by its
+            # staleness relative to the round's first arrival
+            if stacked is not None:
+                deltas = tree_unstack(stacked)
+                stacked = None
+            order = np.argsort(arrivals)
+            t0_arr = arrivals[order[0]]
+            for j in order:
+                stale = max(arrivals[j] - t0_arr, 0.0)
+                w = (1.0 + stale) ** (-cfg.staleness_alpha)
+                upd = jax.tree.map(lambda d: d * w, deltas[j])
                 self.global_params = self.strategy.aggregate(
-                    self.global_params, deltas, weights, rnd
+                    self.global_params, [upd], [weights[j]], rnd
                 )
+        elif cfg.batched:
+            # stacked-delta fast path: kernel-backed reduction (falls
+            # back to the list path inside aggregate_stacked when the
+            # strategy has no stacked twin)
+            if stacked is None:
+                stacked = tree_stack(deltas)
+            self.global_params = self.strategy.aggregate_stacked(
+                self.global_params, stacked, weights, rnd
+            )
+        else:
+            self.global_params = self.strategy.aggregate(
+                self.global_params, deltas, weights, rnd
+            )
 
-            round_time = max(ct for _, ct in deliveries)
-            t += min(round_time, cfg.round_deadline)
-            record.t_end = t
-            self.history.rounds.append(record)
+        round_time = max(arrivals)
+        self.sim_time += min(round_time, cfg.round_deadline)
+        record.t_end = self.sim_time
+        self.history.rounds.append(record)
 
-            if self.eval_data is not None and (rnd + 1) % cfg.eval_every == 0:
-                m = self.task.evaluate(self.global_params, self.eval_data)
-                m["round"] = rnd
-                m["t"] = t
-                self.history.eval_metrics.append(m)
+        if self.eval_data is not None and (rnd + 1) % cfg.eval_every == 0:
+            m = self._evaluate(self.global_params, self.eval_data)
+            m["round"] = rnd
+            m["t"] = self.sim_time
+            self.history.eval_metrics.append(m)
 
+    def run(self) -> History:
+        for rnd in range(self.config.rounds):
+            if self.terminated:
+                break
+            job = self.begin_round(rnd)
+            if job is None:
+                continue
+            stacked, deltas, weights, per_metrics = self.execute_fit(job)
+            self.finish_round(job, stacked, deltas, weights, per_metrics)
         return self.history

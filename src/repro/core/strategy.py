@@ -43,6 +43,12 @@ class Strategy:
     # (stacked_deltas [C,...], weights [C]) -> delta. None => the server
     # unstacks and falls back to the list path.
     stacked_aggregate_fn: Callable = None
+    # Hashable identity of the AGGREGATION semantics (not the quorum
+    # knobs): two strategies with equal fingerprints map equal (deltas,
+    # weights, step) to equal new params. The grid engine keys parameter
+    # provenance on this to coalesce sweep points that share a trajectory;
+    # an empty fingerprint disables sharing for that strategy.
+    agg_fingerprint: tuple = ()
 
     def quorum(self, n_total: int) -> int:
         return max(1, int(np.ceil(self.min_fit_fraction * n_total)))
@@ -110,6 +116,7 @@ def fedavg(min_fit: float = 0.5, min_eval: float = 0.5) -> Strategy:
     return Strategy(
         "fedavg", min_fit, min_eval,
         aggregate_fn=_weighted_mean, stacked_aggregate_fn=_weighted_mean_stacked,
+        agg_fingerprint=("wmean",),
     )
 
 
@@ -117,6 +124,7 @@ def fedprox(mu: float = 0.01, min_fit: float = 0.5) -> Strategy:
     return Strategy(
         "fedprox", min_fit, min_fit, prox_mu=mu,
         aggregate_fn=_weighted_mean, stacked_aggregate_fn=_weighted_mean_stacked,
+        agg_fingerprint=("wmean",),
     )
 
 
@@ -128,6 +136,7 @@ def fedopt(kind: str = "adam", server_lr: float = 0.1, min_fit: float = 0.5) -> 
         server_opt=fedopt_server(kind, lr=server_lr),
         aggregate_fn=_weighted_mean,
         stacked_aggregate_fn=_weighted_mean_stacked,
+        agg_fingerprint=("wmean", "fedopt", kind, float(server_lr)),
     )
 
 
@@ -140,6 +149,7 @@ def diloco(outer_lr: float = 0.7, outer_momentum: float = 0.9, min_fit: float = 
         server_opt=nesterov_outer(outer_lr, outer_momentum),
         aggregate_fn=_weighted_mean,
         stacked_aggregate_fn=_weighted_mean_stacked,
+        agg_fingerprint=("wmean", "nesterov", float(outer_lr), float(outer_momentum)),
     )
 
 
@@ -166,6 +176,7 @@ def trimmed_mean(trim_fraction: float = 0.1, min_fit: float = 0.5) -> Strategy:
     return Strategy(
         "trimmed_mean", min_fit, min_fit,
         aggregate_fn=agg, stacked_aggregate_fn=agg_stacked,
+        agg_fingerprint=("trimmed_mean", float(trim_fraction)),
     )
 
 
@@ -184,6 +195,7 @@ def median(min_fit: float = 0.5) -> Strategy:
     return Strategy(
         "median", min_fit, min_fit,
         aggregate_fn=agg, stacked_aggregate_fn=agg_stacked,
+        agg_fingerprint=("median",),
     )
 
 
@@ -221,6 +233,7 @@ def krum(n_byzantine: int = 1, min_fit: float = 0.5) -> Strategy:
     return Strategy(
         "krum", min_fit, min_fit,
         aggregate_fn=agg, stacked_aggregate_fn=agg_stacked,
+        agg_fingerprint=("krum", int(n_byzantine)),
     )
 
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -231,16 +231,35 @@ def sim_client_round(
 
 
 # ===========================================================================
-# Vectorized cohort Monte Carlo
+# Vectorized cohort / grid Monte Carlo
 # ===========================================================================
 #
 # Batched-draw counterpart of the per-client event loops above: every random
-# decision for the whole cohort is sampled with one numpy call, and the
+# decision for a set of rows is sampled with one numpy call, and the
 # stateful loops (keepalive cycles, AIMD windows, RTO backoff) run in
-# lockstep across clients — loop iterations are shared, draws are [C]-shaped.
-# Same mechanisms and distributions as sim_client_round, but cohort wall
-# time no longer scales with cohort size in Python. Event traces are NOT
-# produced here; use sim_client_round when a trace is needed.
+# lockstep across rows — loop iterations are shared, draws are [k]-shaped.
+# Same mechanisms and distributions as sim_client_round, but wall time no
+# longer scales with row count in Python.
+#
+# Rows carry PER-ROW TCP parameters (``_TcpArrays``) as well as per-row
+# links, so a whole characterization grid — S scenarios x C clients, each
+# scenario with its own TcpParams — can be sampled as one [S*C]-row plane
+# (``sim_grid_round``). Full event traces are not produced on this path;
+# instead an optional SPARSE trace (per-row event counts: SYN packets,
+# keepalive probes/failures, middlebox drops, RTO stalls, retransmitted
+# windows) supports the Fig 7/8 keepalive analyses at cohort scale. Use
+# sim_client_round when an ordered event list is needed.
+
+
+_TRACE_FIELDS = (
+    "syn_attempts",  # SYN packets sent across all handshakes
+    "keepalive_probes",  # probes sent during local-training idle
+    "keepalive_failures",  # probes lost or over-RTT
+    "mbox_drops",  # silent middlebox reaps discovered on send
+    "detected_dead",  # keepalive-detected dead connections
+    "rto_stalls",  # whole-window losses -> RTO backoff events
+    "retrans_windows",  # windows with partial loss (SACK holes)
+)
 
 
 @dataclass
@@ -251,6 +270,18 @@ class CohortOutcome:
     time: np.ndarray  # float seconds
     reconnects: np.ndarray  # int
     bytes_acked: np.ndarray  # int
+    trace: Optional[Dict[str, np.ndarray]] = None  # sparse event counts
+
+
+@dataclass
+class GridOutcome:
+    """Per-(scenario, client) arrays for one grid round (all shape [S, C])."""
+
+    success: np.ndarray
+    time: np.ndarray
+    reconnects: np.ndarray
+    bytes_acked: np.ndarray
+    trace: Optional[Dict[str, np.ndarray]] = None
 
 
 @dataclass
@@ -263,7 +294,7 @@ class _LinkArrays:
     middlebox_timeout: np.ndarray
 
     @classmethod
-    def from_links(cls, links: List[LinkProfile]) -> "_LinkArrays":
+    def from_links(cls, links: Sequence[LinkProfile]) -> "_LinkArrays":
         return cls(
             loss=np.array([l.loss for l in links], float),
             delay=np.array([l.delay for l in links], float),
@@ -281,6 +312,56 @@ class _LinkArrays:
         )
 
 
+@dataclass
+class _TcpArrays:
+    """Per-row TcpParams: one row per (scenario, client) plane slot."""
+
+    syn_rto: np.ndarray
+    syn_retries: np.ndarray  # int
+    handshake_budget: np.ndarray
+    ka_time: np.ndarray
+    ka_intvl: np.ndarray
+    ka_probes: np.ndarray  # int
+    retries2: np.ndarray  # int
+    rmem: np.ndarray  # int
+    sack: np.ndarray  # bool
+    initial_rto: np.ndarray
+    max_rto: np.ndarray
+    mss: np.ndarray  # int
+    window_bytes: np.ndarray  # int
+
+    @classmethod
+    def from_params(cls, tcps: Sequence[TcpParams]) -> "_TcpArrays":
+        return cls(
+            syn_rto=np.array([t.syn_rto for t in tcps], float),
+            syn_retries=np.array([t.tcp_syn_retries for t in tcps], np.int64),
+            handshake_budget=np.array([t.handshake_budget for t in tcps], float),
+            ka_time=np.array([t.tcp_keepalive_time for t in tcps], float),
+            ka_intvl=np.array([t.tcp_keepalive_intvl for t in tcps], float),
+            ka_probes=np.array([t.tcp_keepalive_probes for t in tcps], np.int64),
+            retries2=np.array([t.tcp_retries2 for t in tcps], np.int64),
+            rmem=np.array([t.tcp_rmem for t in tcps], np.int64),
+            sack=np.array([t.tcp_sack for t in tcps], bool),
+            initial_rto=np.array([t.initial_rto for t in tcps], float),
+            max_rto=np.array([t.max_rto for t in tcps], float),
+            mss=np.array([t.mss for t in tcps], np.int64),
+            window_bytes=np.array([t.window_bytes for t in tcps], np.int64),
+        )
+
+    @classmethod
+    def broadcast(cls, tcp: TcpParams, k: int) -> "_TcpArrays":
+        return cls.from_params([tcp]).take(np.zeros(k, np.int64))
+
+    def take(self, idx: np.ndarray) -> "_TcpArrays":
+        return _TcpArrays(
+            self.syn_rto[idx], self.syn_retries[idx], self.handshake_budget[idx],
+            self.ka_time[idx], self.ka_intvl[idx], self.ka_probes[idx],
+            self.retries2[idx], self.rmem[idx], self.sack[idx],
+            self.initial_rto[idx], self.max_rto[idx], self.mss[idx],
+            self.window_bytes[idx],
+        )
+
+
 def _rtt_samples(la: _LinkArrays, rng: np.random.Generator, extra_shape=()) -> np.ndarray:
     shape = extra_shape + la.delay.shape
     j = (rng.normal(0.0, 1.0, shape) + rng.normal(0.0, 1.0, shape)) * la.jitter
@@ -293,83 +374,103 @@ def _bern_ok(la: _LinkArrays, rng: np.random.Generator, extra_shape=()) -> np.nd
     return (rng.random(shape) >= la.loss) & (rng.random(shape) >= la.loss)
 
 
-def _cohort_handshake(
-    tcp: TcpParams, la: _LinkArrays, rng: np.random.Generator
-) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (success [k], time [k]); all SYN attempts sampled at once."""
+def _grid_handshake(
+    ta: _TcpArrays, la: _LinkArrays, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (success [k], time [k], syn_attempts [k]); all SYN attempts
+    sampled at once. Rows with fewer allowed retries are masked, so mixed
+    TcpParams share one lockstep pass."""
     k = la.loss.shape[0]
-    budget = tcp.handshake_budget
-    attempts = tcp.tcp_syn_retries + 1
-    t_send = np.arange(attempts) * tcp.syn_rto  # [R]
-    rtt = _rtt_samples(la, rng, (attempts,)).T  # [k, R]
-    delivered = _bern_ok(la, rng, (attempts,)).T  # [k, R]
-    ok = delivered & (t_send[None, :] <= budget) & (t_send[None, :] + rtt <= budget)
+    attempts = int(ta.syn_retries.max()) + 1
+    a_grid = np.arange(attempts)
+    t_send = a_grid[None, :] * ta.syn_rto[:, None]  # [k, A]
+    rtt = _rtt_samples(la, rng, (attempts,)).T  # [k, A]
+    delivered = _bern_ok(la, rng, (attempts,)).T  # [k, A]
+    budget = ta.handshake_budget[:, None]
+    allowed = (a_grid[None, :] <= ta.syn_retries[:, None]) & (t_send <= budget)
+    ok = delivered & allowed & (t_send + rtt <= budget)
     success = ok.any(axis=1)
     first = np.argmax(ok, axis=1)
-    time = np.where(success, t_send[first] + rtt[np.arange(k), first], budget)
-    return success, time
+    rows = np.arange(k)
+    time = np.where(
+        success, t_send[rows, first] + rtt[rows, first], ta.handshake_budget
+    )
+    syn_attempts = np.where(success, first + 1, allowed.sum(axis=1))
+    return success, time, syn_attempts
 
 
-def _cohort_idle(
-    tcp: TcpParams, la: _LinkArrays, idle_time: np.ndarray, rng: np.random.Generator
-) -> np.ndarray:
-    """Keepalive/middlebox outcome per client: 0 alive, 1 detected_dead,
-    2 silent_dead. Probe cycles run in lockstep; draws are [k] per cycle."""
+def _grid_idle(
+    ta: _TcpArrays, la: _LinkArrays, idle_time: np.ndarray, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Keepalive/middlebox outcome per row: 0 alive, 1 detected_dead,
+    2 silent_dead, plus (probes, probe_failures) counts. Probe cycles run
+    in lockstep; each row follows its own probe schedule (per-row
+    keepalive_time/intvl)."""
     k = la.loss.shape[0]
     state = np.zeros(k, np.int8)
+    probes = np.zeros(k, np.int64)
+    probe_fails = np.zeros(k, np.int64)
     mbox = la.middlebox_timeout
-    no_probe = tcp.tcp_keepalive_time >= idle_time
+    no_probe = ta.ka_time >= idle_time
     state[no_probe & (idle_time > mbox)] = 2
 
     undecided = ~no_probe
     if not undecided.any():
-        return state
+        return state, probes, probe_fails
     last_refresh = np.zeros(k)
     consecutive = np.zeros(k, np.int64)
-    t = tcp.tcp_keepalive_time
-    t_max = float(idle_time.max())
-    while undecided.any() and t <= t_max:
+    t = ta.ka_time.astype(float).copy()
+    while True:
         active = undecided & (t <= idle_time)
+        if not active.any():
+            break
         rtt = _rtt_samples(la, rng)
-        ok = _bern_ok(la, rng) & (rtt <= tcp.tcp_keepalive_intvl)
+        ok = _bern_ok(la, rng) & (rtt <= ta.ka_intvl)
         gap_drop = active & (t - last_refresh > mbox)
         state[gap_drop] = 2
         undecided &= ~gap_drop
         active &= ~gap_drop
+        probes += active
         refreshed = active & ok
-        last_refresh[refreshed] = t
+        last_refresh[refreshed] = t[refreshed]
         consecutive[refreshed] = 0
         failed = active & ~ok
+        probe_fails += failed
         consecutive[failed] += 1
-        dead = failed & (consecutive >= tcp.tcp_keepalive_probes)
+        dead = failed & (consecutive >= ta.ka_probes)
         state[dead] = 1
         undecided &= ~dead
-        t += tcp.tcp_keepalive_intvl
+        t = t + ta.ka_intvl
     tail = undecided & (idle_time - last_refresh > mbox)
     state[tail] = 2
-    return state
+    return state, probes, probe_fails
 
 
-def _cohort_transfer(
-    tcp: TcpParams, la: _LinkArrays, nbytes: int, rng: np.random.Generator
-) -> Tuple[np.ndarray, np.ndarray]:
-    """Lockstep AIMD over the cohort; returns (success [k], time [k]).
+def _grid_transfer(
+    ta: _TcpArrays, la: _LinkArrays, nbytes: np.ndarray, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Lockstep AIMD over the rows; returns (success, time, rto_stalls,
+    retrans_windows), all [k].
 
     Mirrors sim_transfer's per-window mechanics (window sizing, binomial
     loss, SACK reorder accounting, RTO backoff with constant per-attempt
-    loss probability) with one [k]-shaped draw per shared loop iteration.
+    loss probability) with one [k]-shaped draw per shared loop iteration
+    and per-row TCP constants.
     """
     k = la.loss.shape[0]
-    segs_total = max(1, math.ceil(nbytes / tcp.mss))
-    wnd_max = max(tcp.window_bytes // tcp.mss, 2)
+    nbytes = np.broadcast_to(np.asarray(nbytes, np.int64), (k,))
+    segs_total = np.maximum((nbytes + ta.mss - 1) // ta.mss, 1)
+    wnd_max = np.maximum(ta.window_bytes // ta.mss, 2)
     t = np.zeros(k)
     cwnd = np.full(k, 10.0)
     acked = np.zeros(k, np.int64)
     pending = np.zeros(k, np.int64)
-    rto = np.full(k, tcp.initial_rto)
+    rto = ta.initial_rto.astype(float).copy()
     reorder = np.zeros(k)
     active = np.ones(k, bool)
     success = np.zeros(k, bool)
+    rto_stalls = np.zeros(k, np.int64)
+    retrans_windows = np.zeros(k, np.int64)
     p = la.loss
 
     iters = 0
@@ -380,10 +481,13 @@ def _cohort_transfer(
         rtt = _rtt_samples(la, rng)
         rate_cap = np.where(
             la.rate_mbps > 0,
-            np.maximum((la.rate_mbps * 1e6 / 8.0 * rtt / tcp.mss).astype(np.int64), 1),
+            np.maximum((la.rate_mbps * 1e6 / 8.0 * rtt / ta.mss).astype(np.int64), 1),
             np.int64(2**60),
         )
-        w = np.minimum(np.minimum(cwnd.astype(np.int64), wnd_max), np.minimum(la.queue_limit.astype(np.int64), rate_cap))
+        w = np.minimum(
+            np.minimum(cwnd.astype(np.int64), wnd_max),
+            np.minimum(la.queue_limit.astype(np.int64), rate_cap),
+        )
         remaining = np.maximum(segs_total - acked + pending, 0)
         w = np.minimum(np.maximum(w, 1), remaining)
         w = np.where(active, w, 0)  # finished/failed rows draw nothing
@@ -395,27 +499,29 @@ def _cohort_transfer(
         stalled = active & (delivered == 0)
         if stalled.any():
             t[stalled] += rto[stalled]
+            rto_stalls += stalled
             consecutive = np.where(stalled, 1, 0)
             still = stalled.copy()
             while still.any():
                 lost_again = rng.random(k) < p
-                cont = still & (consecutive < tcp.tcp_retries2) & lost_again
-                dead_now = still & (consecutive >= tcp.tcp_retries2)
+                cont = still & (consecutive < ta.retries2) & lost_again
+                dead_now = still & (consecutive >= ta.retries2)
                 still = cont
-                rto[cont] = np.minimum(rto[cont] * 2.0, tcp.max_rto)
+                rto[cont] = np.minimum(rto[cont] * 2.0, ta.max_rto[cont])
                 t[cont] += rto[cont]
                 consecutive[cont] += 1
                 active &= ~dead_now
             surv = stalled & active
             cwnd[surv] = 10.0
-            rto[surv] = np.minimum(rto[surv] * 2.0, tcp.max_rto)
+            rto[surv] = np.minimum(rto[surv] * 2.0, ta.max_rto[surv])
 
         # --- progress: ack, SACK holes, cwnd evolution ---
         prog = active & (delivered > 0)
-        rto[prog] = tcp.initial_rto
-        holed = prog & (lost > 0) & tcp.tcp_sack
-        reorder[holed] += delivered[holed] * tcp.mss
-        buf_dead = holed & (reorder > tcp.tcp_rmem * 48)
+        rto[prog] = ta.initial_rto[prog]
+        holed = prog & (lost > 0) & ta.sack
+        retrans_windows += holed
+        reorder[holed] += delivered[holed] * ta.mss[holed]
+        buf_dead = holed & (reorder > ta.rmem * 48)
         active &= ~buf_dead
         holed &= ~buf_dead
         cwnd[holed] = np.maximum(cwnd[holed] / 2.0, 2.0)
@@ -424,78 +530,218 @@ def _cohort_transfer(
         reorder[clean] = 0.0
         pending[clean] = 0
         cwnd[clean] = np.where(
-            cwnd[clean] >= wnd_max / 2.0, cwnd[clean] + 1.0, cwnd[clean] * 2.0
+            cwnd[clean] >= wnd_max[clean] / 2.0, cwnd[clean] + 1.0, cwnd[clean] * 2.0
         )
         acked = np.where(prog & active, acked + delivered, acked)
         done = active & (acked >= segs_total)
         success |= done
         active &= ~done
-    return success, t
+    return success, t, rto_stalls, retrans_windows
+
+
+def _sim_rows(
+    ta: _TcpArrays,
+    la: _LinkArrays,
+    *,
+    up_bytes: np.ndarray,
+    down_bytes: np.ndarray,
+    local_train_times: np.ndarray,
+    rng: np.random.Generator,
+    connected: np.ndarray,
+):
+    """One FL round for a plane of rows with batched draws: handshake-if-
+    needed -> download -> idle (keepalive/middlebox) -> reconnect-if-dead ->
+    upload, each stage sampled for every row at once. Returns
+    (success, time, reconnects, bytes_acked, counts)."""
+    k = la.loss.shape[0]
+    t = np.zeros(k)
+    reconnects = np.zeros(k, np.int64)
+    alive = np.ones(k, bool)
+    counts = {name: np.zeros(k, np.int64) for name in _TRACE_FIELDS}
+
+    idx = np.where(~connected)[0]
+    if idx.size:
+        ok, ht, att = _grid_handshake(ta.take(idx), la.take(idx), rng)
+        t[idx] += ht
+        reconnects[idx] += 1
+        alive[idx] &= ok
+        counts["syn_attempts"][idx] += att
+
+    idx = np.where(alive)[0]
+    if idx.size:
+        ok, dt, stalls, rwnd = _grid_transfer(
+            ta.take(idx), la.take(idx), down_bytes[idx], rng
+        )
+        t[idx] += dt
+        alive[idx] &= ok
+        counts["rto_stalls"][idx] += stalls
+        counts["retrans_windows"][idx] += rwnd
+
+    idx = np.where(alive)[0]
+    if idx.size:
+        state, probes, pfails = _grid_idle(
+            ta.take(idx), la.take(idx), local_train_times[idx], rng
+        )
+        t[idx] += local_train_times[idx]
+        counts["keepalive_probes"][idx] += probes
+        counts["keepalive_failures"][idx] += pfails
+        silent = idx[state == 2]
+        counts["mbox_drops"][silent] += 1
+        counts["detected_dead"][idx[state == 1]] += 1
+        if silent.size:
+            ta_s = ta.take(silent)
+            stall = np.minimum(
+                sum(
+                    np.minimum(ta_s.initial_rto * 2**i, ta_s.max_rto)
+                    for i in range(6)
+                ),
+                60.0,
+            )
+            t[silent] += stall
+        need_hs = idx[state != 0]
+        if need_hs.size:
+            ok, ht, att = _grid_handshake(ta.take(need_hs), la.take(need_hs), rng)
+            t[need_hs] += ht
+            reconnects[need_hs] += 1
+            alive[need_hs] &= ok
+            counts["syn_attempts"][need_hs] += att
+
+    idx = np.where(alive)[0]
+    if idx.size:
+        ok, ut, stalls, rwnd = _grid_transfer(
+            ta.take(idx), la.take(idx), up_bytes[idx], rng
+        )
+        t[idx] += ut
+        alive[idx] &= ok
+        counts["rto_stalls"][idx] += stalls
+        counts["retrans_windows"][idx] += rwnd
+
+    bytes_acked = np.where(alive, up_bytes + down_bytes, 0).astype(np.int64)
+    return alive, t, reconnects, bytes_acked, counts
 
 
 def sim_cohort_round(
     tcp: TcpParams,
-    links: List[LinkProfile],
+    links: Sequence[LinkProfile],
     *,
     update_bytes: int,
     local_train_times: np.ndarray,
     rng: np.random.Generator,
     connected: np.ndarray,
     download_bytes: Optional[int] = None,
+    trace: bool = False,
 ) -> CohortOutcome:
     """One FL round for a whole cohort with batched draws.
 
-    Vector twin of ``sim_client_round``: handshake-if-needed -> download ->
-    idle (keepalive/middlebox) -> reconnect-if-dead -> upload, each stage
-    sampled for every client at once. ``connected`` and
-    ``local_train_times`` are [C]-shaped.
+    Vector twin of ``sim_client_round``: every stage sampled for all
+    clients at once. ``connected`` and ``local_train_times`` are
+    [C]-shaped. With ``trace=True`` the outcome carries sparse per-client
+    event counts (see _TRACE_FIELDS) instead of an ordered event list.
     """
     download_bytes = update_bytes if download_bytes is None else download_bytes
-    la = _LinkArrays.from_links(links)
     k = len(links)
-    t = np.zeros(k)
-    reconnects = np.zeros(k, np.int64)
-    alive = np.ones(k, bool)
-    local_train_times = np.asarray(local_train_times, float)
-    connected = np.asarray(connected, bool)
+    alive, t, reconnects, bytes_acked, counts = _sim_rows(
+        _TcpArrays.broadcast(tcp, k),
+        _LinkArrays.from_links(links),
+        up_bytes=np.full(k, update_bytes, np.int64),
+        down_bytes=np.full(k, download_bytes, np.int64),
+        local_train_times=np.asarray(local_train_times, float),
+        rng=rng,
+        connected=np.asarray(connected, bool),
+    )
+    return CohortOutcome(alive, t, reconnects, bytes_acked, counts if trace else None)
 
-    def subset(mask):
-        return np.where(mask)[0]
 
-    idx = subset(~connected)
-    if idx.size:
-        ok, ht = _cohort_handshake(tcp, la.take(idx), rng)
-        t[idx] += ht
-        reconnects[idx] += 1
-        alive[idx] &= ok
+def sim_grid_round(
+    tcps,
+    links,
+    *,
+    update_bytes,
+    local_train_times: np.ndarray,
+    connected: np.ndarray,
+    rng: Optional[np.random.Generator] = None,
+    rngs: Optional[Sequence[np.random.Generator]] = None,
+    download_bytes=None,
+    trace: bool = False,
+) -> GridOutcome:
+    """One FL round for a whole characterization grid: S scenarios x C
+    clients, each scenario with its own TcpParams and per-client links.
 
-    idx = subset(alive)
-    if idx.size:
-        ok, dt = _cohort_transfer(tcp, la.take(idx), download_bytes, rng)
-        t[idx] += dt
-        alive[idx] &= ok
+    Two sampling modes:
 
-    idx = subset(alive)
-    if idx.size:
-        state = _cohort_idle(tcp, la.take(idx), local_train_times[idx], rng)
-        t[idx] += local_train_times[idx]
-        silent = idx[state == 2]
-        stall = min(
-            sum(min(tcp.initial_rto * 2**i, tcp.max_rto) for i in range(6)), 60.0
+    - ``rngs=[gen_0..gen_{S-1}]`` (parity mode): each scenario's draws come
+      from its OWN generator, consumed exactly as a per-scenario
+      ``sim_cohort_round`` call would — grid outcomes are bit-identical to
+      per-point runs at equal seeds. Stages still vectorize over C.
+    - ``rng=gen`` (fused mode): the whole [S*C] plane is sampled in one
+      lockstep pass per stage with per-row TCP arrays — fastest at scale,
+      same distributions, but a single shared draw order (use for
+      throughput, not for per-point reproduction).
+
+    ``tcps`` is one TcpParams or a length-S sequence; ``links`` is [S][C];
+    ``update_bytes``/``download_bytes`` are scalars or length-S;
+    ``local_train_times``/``connected`` are [S, C]. All outputs are [S, C].
+    """
+    S = len(links)
+    C = len(links[0]) if S else 0
+    tcp_list = [tcps] * S if isinstance(tcps, TcpParams) else list(tcps)
+    up = np.broadcast_to(np.asarray(update_bytes, np.int64), (S,))
+    down = (
+        up
+        if download_bytes is None
+        else np.broadcast_to(np.asarray(download_bytes, np.int64), (S,))
+    )
+    local_train_times = np.asarray(local_train_times, float).reshape(S, C)
+    connected = np.asarray(connected, bool).reshape(S, C)
+
+    if (rng is None) == (rngs is None):
+        raise ValueError("pass exactly one of rng= (fused) or rngs= (per-scenario)")
+
+    if rngs is not None:
+        outs = [
+            sim_cohort_round(
+                tcp_list[s],
+                links[s],
+                update_bytes=int(up[s]),
+                local_train_times=local_train_times[s],
+                rng=rngs[s],
+                connected=connected[s],
+                download_bytes=int(down[s]),
+                trace=trace,
+            )
+            for s in range(S)
+        ]
+        return GridOutcome(
+            np.stack([o.success for o in outs]),
+            np.stack([o.time for o in outs]),
+            np.stack([o.reconnects for o in outs]),
+            np.stack([o.bytes_acked for o in outs]),
+            (
+                {f: np.stack([o.trace[f] for o in outs]) for f in _TRACE_FIELDS}
+                if trace
+                else None
+            ),
         )
-        t[silent] += stall
-        need_hs = idx[state != 0]
-        if need_hs.size:
-            ok, ht = _cohort_handshake(tcp, la.take(need_hs), rng)
-            t[need_hs] += ht
-            reconnects[need_hs] += 1
-            alive[need_hs] &= ok
 
-    idx = subset(alive)
-    if idx.size:
-        ok, ut = _cohort_transfer(tcp, la.take(idx), update_bytes, rng)
-        t[idx] += ut
-        alive[idx] &= ok
-
-    bytes_acked = np.where(alive, update_bytes + download_bytes, 0).astype(np.int64)
-    return CohortOutcome(alive, t, reconnects, bytes_acked)
+    flat_links = [l for row in links for l in row]
+    ta = _TcpArrays.from_params(tcp_list).take(np.repeat(np.arange(S), C))
+    alive, t, reconnects, bytes_acked, counts = _sim_rows(
+        ta,
+        _LinkArrays.from_links(flat_links),
+        up_bytes=np.repeat(up, C),
+        down_bytes=np.repeat(down, C),
+        local_train_times=local_train_times.reshape(-1),
+        rng=rng,
+        connected=connected.reshape(-1),
+    )
+    return GridOutcome(
+        alive.reshape(S, C),
+        t.reshape(S, C),
+        reconnects.reshape(S, C),
+        bytes_acked.reshape(S, C),
+        (
+            {f: counts[f].reshape(S, C) for f in _TRACE_FIELDS}
+            if trace
+            else None
+        ),
+    )

@@ -1,0 +1,320 @@
+"""Scenario-parallel grid engine tests: exact parity with per-point runs,
+provenance coalescing, bucketed plane dispatch, chunked unrolling, and the
+(S, C) transport grid with sparse traces."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosSchedule, client_failure_schedule
+from repro.core import (
+    EdgeClient,
+    FederatedServer,
+    GridPoint,
+    ServerConfig,
+    fedavg,
+    mnist_cnn_task,
+    run_fl_grid,
+    trimmed_mean,
+)
+from repro.core.client import _ROW_BUCKETS, bucket_rows
+from repro.data import make_federated_mnist, synthetic_mnist
+from repro.transport import DEFAULT, LAB, TUNED_EDGE, sim_cohort_round, sim_grid_round
+
+# one shared task so every test reuses the same jit caches
+TASK = mnist_cnn_task()
+SHARDS = make_federated_mnist(6, 64, seed=0)
+EVAL = synthetic_mnist(300, seed=77)
+
+
+def _point(
+    *, tcp=DEFAULT, link=LAB, chaos=None, strategy=None, min_fit=0.5, rounds=3,
+    seed=0, local_steps=2, stochastic=False, batched=True,
+):
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(SHARDS)]
+    return GridPoint(
+        clients,
+        strategy or fedavg(min_fit=min_fit),
+        tcp,
+        chaos or ChaosSchedule(link),
+        ServerConfig(
+            rounds=rounds, local_steps=local_steps, seed=seed, batched=batched,
+            stochastic=stochastic,
+        ),
+    )
+
+
+def _run_per_point(p: GridPoint):
+    return FederatedServer(
+        TASK, p.clients, p.strategy, tcp=p.tcp, chaos=p.chaos, config=p.config,
+        eval_data=EVAL,
+    ).run()
+
+
+def _summaries_exactly_equal(a, b):
+    for k in a:
+        va, vb = a[k], b[k]
+        if va != vb and not (va != va and vb != vb):  # nan == nan here
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# grid == per-point, exactly (the headline contract)
+# ---------------------------------------------------------------------------
+
+
+def _point_kwargs_matrix():
+    return [
+        dict(tcp=DEFAULT, link=LAB),
+        dict(tcp=TUNED_EDGE, link=LAB),
+        dict(tcp=DEFAULT, link=LAB.replace(delay=0.3)),
+        dict(tcp=DEFAULT, link=LAB.replace(loss=0.15)),
+        dict(tcp=DEFAULT, link=LAB.replace(delay=8.0)),  # dead run -> nan
+        dict(tcp=TUNED_EDGE, link=LAB.replace(delay=8.0)),
+    ]
+
+
+def test_grid_matches_per_point_exactly():
+    """Every summary field — including the simulated clock and the final
+    accuracy — is bitwise identical between the grid engine and per-point
+    runs at the same seed. Not a tolerance check."""
+    kwargs = _point_kwargs_matrix()
+    res = run_fl_grid(TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL)
+    for kw, hist in zip(kwargs, res.histories):
+        ref = _run_per_point(_point(**kw)).summary()
+        got = hist.summary()
+        assert _summaries_exactly_equal(ref, got), (kw, ref, got)
+
+
+def test_grid_matches_per_point_exactly_stochastic():
+    """DES transport mode: per-scenario RNG streams are preserved, so even
+    event-granular sampling reproduces per-point runs exactly."""
+    kwargs = [
+        dict(tcp=DEFAULT, link=LAB, stochastic=True),
+        dict(tcp=DEFAULT, link=LAB.replace(loss=0.05), stochastic=True),
+        dict(tcp=TUNED_EDGE, link=LAB.replace(delay=0.5), stochastic=True),
+    ]
+    res = run_fl_grid(TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL)
+    for kw, hist in zip(kwargs, res.histories):
+        ref = _run_per_point(_point(**kw)).summary()
+        assert _summaries_exactly_equal(ref, hist.summary()), kw
+
+
+def test_grid_matches_per_point_with_client_failure_chaos():
+    """Chaos-variable cohorts (pod kills) through the grid: still exact."""
+    kwargs = [
+        dict(chaos=ChaosSchedule(LAB).add(client_failure_schedule(6, f, seed=7)),
+             min_fit=0.1)
+        for f in (0.0, 0.3, 0.5)
+    ]
+    res = run_fl_grid(TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL)
+    for kw, hist in zip(kwargs, res.histories):
+        ref = _run_per_point(_point(**kw)).summary()
+        assert _summaries_exactly_equal(ref, hist.summary()), kw
+
+
+def test_grid_mixed_strategies_exact():
+    """Points with different aggregation strategies coexist in one plane
+    (different agg fingerprints never coalesce downstream state)."""
+    kwargs = [
+        dict(strategy=fedavg(min_fit=0.5)),
+        dict(strategy=trimmed_mean(0.2, min_fit=0.5)),
+    ]
+    res = run_fl_grid(TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL)
+    for kw, hist in zip(kwargs, res.histories):
+        ref = _run_per_point(_point(**kw)).summary()
+        assert _summaries_exactly_equal(ref, hist.summary()), kw
+
+
+# ---------------------------------------------------------------------------
+# coalescing and eval memoization
+# ---------------------------------------------------------------------------
+
+
+def test_grid_coalesces_shared_trajectories():
+    """Sweep points whose round inputs coincide share plane rows and eval:
+    a pure-latency grid (transport times change, gradients don't) computes
+    ONE trajectory."""
+    kwargs = [
+        dict(tcp=DEFAULT, link=LAB.replace(delay=d)) for d in (0.0, 0.1, 0.3, 1.0)
+    ]
+    res = run_fl_grid(TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL)
+    s = res.stats
+    assert s.fit_rows_total == 4 * s.fit_rows_unique  # 4 points, 1 trajectory
+    assert s.evals_computed * 4 == s.evals_requested
+    # and the shared trajectory is the per-point one
+    ref = _run_per_point(_point(**kwargs[0])).summary()
+    for hist in res.histories:
+        assert hist.summary()["final_accuracy"] == ref["final_accuracy"]
+
+
+def test_grid_coalescing_off_still_exact():
+    kwargs = [dict(tcp=DEFAULT, link=LAB)] * 2
+    res = run_fl_grid(
+        TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL, coalesce=False
+    )
+    assert res.stats.fit_rows_unique == res.stats.fit_rows_total
+    ref = _run_per_point(_point(**kwargs[0])).summary()
+    for hist in res.histories:
+        assert _summaries_exactly_equal(ref, hist.summary())
+
+
+# ---------------------------------------------------------------------------
+# plane mechanics: row independence, bucketing, chunked unroll
+# ---------------------------------------------------------------------------
+
+
+def test_plane_rows_width_and_position_independent():
+    """A row's delta is bitwise identical regardless of plane width or row
+    position — the property that makes grid results exactly reproduce
+    per-point runs no matter how rows are grouped."""
+    params = TASK.init_fn(jax.random.PRNGKey(0))
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(SHARDS)]
+    plans = TASK.plan_fit(clients, 2, np.random.default_rng(3))
+    rows = list(zip(clients, plans))
+    anchors = [params] * len(rows)
+    mus = [0.0] * len(rows)
+
+    plane_all, _, _ = TASK.fit_rows(anchors, rows, 2, mus, False)
+    plane_tail, _, _ = TASK.fit_rows(anchors[3:], rows[3:], 2, mus[3:], False)
+    for a, b in zip(jax.tree.leaves(plane_tail), jax.tree.leaves(plane_all)):
+        assert np.array_equal(np.asarray(a[:3]), np.asarray(b[3:6]))
+
+
+def test_bucket_rows_ladder():
+    assert bucket_rows(1) == 1
+    assert bucket_rows(5) == 6
+    assert bucket_rows(10) == 12
+    assert bucket_rows(128) == 128
+    assert bucket_rows(129) == 192  # past the ladder: multiples of 64
+    for n in range(1, 200):
+        assert bucket_rows(n) >= n
+
+
+def test_plane_dispatches_use_bucket_widths():
+    """Chaos-variable cohort sizes land on the bucket ladder, bounding
+    compiled program count in client-failure sweeps."""
+    before = len(TASK.plane_dispatch_widths())
+    kwargs = [
+        dict(chaos=ChaosSchedule(LAB).add(client_failure_schedule(6, f, seed=11)),
+             min_fit=0.1)
+        for f in (0.0, 0.2, 0.4, 0.6)
+    ]
+    run_fl_grid(TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL)
+    widths = TASK.plane_dispatch_widths()[before:]
+    assert widths, "plane path did not run"
+    ladder = set(_ROW_BUCKETS)
+    assert all(w in ladder or w % 64 == 0 for w in widths), widths
+
+
+def test_chunked_unroll_long_epochs_matches_sequential():
+    """Past _UNROLL_LIMIT the plane runs donated fused chunks; the batched
+    fit still tracks the sequential per-client trajectory and consumes the
+    RNG stream identically."""
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(SHARDS[:2])]
+    params = TASK.init_fn(jax.random.PRNGKey(1))
+    steps = 20  # > _UNROLL_LIMIT(16): 2 full chunks of 8 + remainder 4
+    r_bat, r_seq = np.random.default_rng(5), np.random.default_rng(5)
+    stacked, weights, metrics = TASK.batched_local_fit(params, clients, steps, r_bat, 0.0)
+    for i, client in enumerate(clients):
+        d, n_ex, m = TASK.local_fit(params, client, steps, r_seq, 0.0)
+        assert weights[i] == n_ex
+        for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(d)):
+            assert float(jnp.max(jnp.abs(a[i] - b))) < 5e-4
+        assert abs(metrics[i]["loss"] - m["loss"]) < 1e-3
+    assert r_bat.integers(0, 2**31) == r_seq.integers(0, 2**31)
+
+
+# ---------------------------------------------------------------------------
+# (S, C) transport grid + sparse traces
+# ---------------------------------------------------------------------------
+
+
+def test_sim_grid_round_parity_mode_matches_cohort():
+    """rngs= mode: per-scenario streams reproduce per-scenario
+    sim_cohort_round calls bit for bit."""
+    links = [
+        [LAB, LAB.replace(loss=0.05), LAB.replace(delay=0.3)],
+        [LAB.replace(delay=6.0)] * 3,
+    ]
+    ltt = np.full((2, 3), 10.0)
+    conn = np.zeros((2, 3), bool)
+    out = sim_grid_round(
+        [DEFAULT, TUNED_EDGE], links, update_bytes=100_000,
+        local_train_times=ltt, connected=conn,
+        rngs=[np.random.default_rng(0), np.random.default_rng(0)], trace=True,
+    )
+    for s, tcp in enumerate((DEFAULT, TUNED_EDGE)):
+        ref = sim_cohort_round(
+            tcp, links[s], update_bytes=100_000, local_train_times=ltt[s],
+            rng=np.random.default_rng(0), connected=conn[s], trace=True,
+        )
+        assert np.array_equal(out.success[s], ref.success)
+        assert np.allclose(out.time[s], ref.time)
+        for f in ref.trace:
+            assert np.array_equal(out.trace[f][s], ref.trace[f])
+
+
+def test_sim_grid_round_fused_mode_per_row_tcp():
+    """rng= mode: one lockstep pass over the [S*C] plane with per-row TCP
+    params. The default handshake budget dies at 6 s OWD, the tuned one
+    survives — inside one fused call."""
+    link = LAB.replace(delay=6.0)
+    out = sim_grid_round(
+        [DEFAULT, TUNED_EDGE], [[link] * 4, [link] * 4], update_bytes=50_000,
+        local_train_times=np.full((2, 4), 5.0), connected=np.zeros((2, 4), bool),
+        rng=np.random.default_rng(3), trace=True,
+    )
+    assert not out.success[0].any()
+    assert out.success[1].all()
+    assert out.trace["syn_attempts"].shape == (2, 4)
+    # same seed, same call => deterministic
+    out2 = sim_grid_round(
+        [DEFAULT, TUNED_EDGE], [[link] * 4, [link] * 4], update_bytes=50_000,
+        local_train_times=np.full((2, 4), 5.0), connected=np.zeros((2, 4), bool),
+        rng=np.random.default_rng(3), trace=True,
+    )
+    assert np.allclose(out.time, out2.time)
+
+
+def test_cohort_trace_keepalive_counts_deterministic():
+    """On a clean link the sparse trace is exact: probe count follows the
+    keepalive schedule, and a 7200 s keepalive_time past the middlebox
+    timeout is silently reaped (the paper's burst-idle pathology)."""
+    idle = 900.0
+    probing = DEFAULT.replace(tcp_keepalive_time=60.0, tcp_keepalive_intvl=75.0)
+    out = sim_cohort_round(
+        probing, [LAB] * 3, update_bytes=10_000,
+        local_train_times=np.full(3, idle), rng=np.random.default_rng(0),
+        connected=np.ones(3, bool), trace=True,
+    )
+    # probes at 60, 135, ..., <= 900 -> 12 probes; lossless => no failures
+    expected = len(np.arange(60.0, idle + 1e-9, 75.0))
+    assert np.array_equal(out.trace["keepalive_probes"], np.full(3, expected))
+    assert np.array_equal(out.trace["keepalive_failures"], np.zeros(3))
+    assert np.array_equal(out.trace["mbox_drops"], np.zeros(3))
+
+    reaped = sim_cohort_round(
+        DEFAULT, [LAB] * 3, update_bytes=10_000,  # keepalive_time 7200 > idle
+        local_train_times=np.full(3, idle), rng=np.random.default_rng(0),
+        connected=np.ones(3, bool), trace=True,
+    )
+    assert np.array_equal(reaped.trace["mbox_drops"], np.ones(3))
+    assert np.array_equal(reaped.trace["keepalive_probes"], np.zeros(3))
+    assert (reaped.reconnects >= 1).all()  # discovered dead -> reconnect
+
+
+def test_trace_disabled_by_default():
+    out = sim_cohort_round(
+        DEFAULT, [LAB] * 2, update_bytes=10_000,
+        local_train_times=np.full(2, 5.0), rng=np.random.default_rng(0),
+        connected=np.ones(2, bool),
+    )
+    assert out.trace is None
+
+
+def test_strategy_fingerprints_distinguish_factories():
+    assert fedavg().agg_fingerprint == fedavg(min_fit=0.1).agg_fingerprint
+    assert trimmed_mean(0.1).agg_fingerprint != trimmed_mean(0.2).agg_fingerprint
