@@ -44,6 +44,7 @@ EXAMPLES_PER_CLIENT = 200
 _TASK = None
 _SHARDS: Dict[int, list] = {}
 _EVAL_DATA = None
+_COMPRESSORS: Dict[str, object] = {}
 last_grid_stats = None  # GridStats of the most recent grid sweep (bench telemetry)
 
 
@@ -75,6 +76,27 @@ def _shared_eval_data():
     return _EVAL_DATA
 
 
+def _shared_compressor(spec):
+    """Compressor per spec string ("topk:0.05", "int8", ...), shared across
+    sweep points: the plane compressor's jit caches are closures on the
+    instance, and the grid engine's residual digests share best when every
+    point references one fingerprint-equal object."""
+    if spec is None or not isinstance(spec, str):
+        return spec  # already a Compressor (or None)
+    from repro.compress import get_compressor
+
+    name, _, arg = spec.partition(":")
+    kw = {"ratio": float(arg)} if arg else {}
+    if name == "randk":
+        # stateful (rotating selection counter): a shared instance would
+        # leak draw state across points/runs and break fixed-seed
+        # reproducibility — every point gets a fresh one
+        return get_compressor(name, **kw)
+    if spec not in _COMPRESSORS:
+        _COMPRESSORS[spec] = get_compressor(name, **kw)
+    return _COMPRESSORS[spec]
+
+
 def _make_point(
     *,
     tcp: TcpParams = DEFAULT,
@@ -85,6 +107,7 @@ def _make_point(
     seed: int = 0,
     local_steps: int = LOCAL_STEPS,
     batched: bool = True,
+    compressor=None,
 ) -> GridPoint:
     clients = [EdgeClient(i, dataset=s) for i, s in enumerate(_shared_shards(seed))]
     return GridPoint(
@@ -95,6 +118,7 @@ def _make_point(
         config=ServerConfig(
             rounds=rounds, local_steps=local_steps, seed=seed, batched=batched
         ),
+        compressor=_shared_compressor(compressor),
     )
 
 
@@ -121,6 +145,7 @@ def run_fl_experiment(**point) -> Dict[str, float]:
         tcp=p.tcp,
         chaos=p.chaos,
         config=p.config,
+        compressor=p.compressor,
         eval_data=_shared_eval_data(),
     )
     return _summarize(server.run().summary(), p.config.rounds)

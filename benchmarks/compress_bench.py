@@ -1,0 +1,160 @@
+"""Plane-resident compression benchmark: compressed characterization grid,
+stacked plane vs the unstacked per-client baseline.
+
+Runs a fig4-style (packet-loss x tcp-config x compressor) grid — top-k
+and int8 payloads under default and big-buffer TCP, the first mitigations
+practitioners reach for at the paper's breaking points — through two
+execution paths at the same fixed seed:
+
+- ``plane``: ``run_fl_grid`` with plane-resident compression — stacked
+  top-k/int8 inside the jit, error-feedback residuals as a donated device
+  plane, residual-digest provenance so compressed points coalesce rows and
+  memoize eval, unique-anchor gather;
+- ``unstacked``: one FederatedServer per sweep point with the compressor's
+  plane twin stripped (``compress_plane=None``) — the pre-plane path that
+  unstacks the cohort and compresses client by client in Python.
+
+Emits a BENCH json line with both wall times, the speedup, plane/coalescing
+telemetry, and EXACT row parity (CSV-text equality, nan-aware): plane
+compression is bitwise identical to sequential per-client compression, so
+any drift is a bug and exits non-zero.
+
+Methodology matches sweep_bench: one shared task + shared compressor
+instances (warm jit caches), a thinned warmup grid through both paths
+before timing, interleaved reps, median wall time reported.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/compress_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+LOSSES = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5]
+COMPRESSORS = ["topk:0.05", "int8"]
+
+_STRIPPED = {}  # spec -> plane-less Compressor (shared so jit caches warm)
+
+
+def _stripped(spec):
+    from benchmarks.common import _shared_compressor
+
+    if spec not in _STRIPPED:
+        _STRIPPED[spec] = dataclasses.replace(
+            _shared_compressor(spec), compress_plane=None
+        )
+    return _STRIPPED[spec]
+
+
+def sweep_points(fast: bool = False):
+    from repro.transport import BIG_BUFFER, DEFAULT, LAB
+
+    losses = LOSSES[::2] if fast else LOSSES
+    tcps = [("default", DEFAULT), ("bigbuf", BIG_BUFFER)]
+    labels, points = [], []
+    for comp in COMPRESSORS:
+        for tcp_name, tcp in tcps:
+            for p in losses:
+                link = LAB.replace(loss=p, name=f"loss{p}")
+                labels.append((comp, tcp_name, p))
+                points.append(dict(tcp=tcp, link=link, compressor=comp))
+    return labels, points
+
+
+def compute_rows(fast: bool = False, engine: str = "plane"):
+    from benchmarks.common import run_fl_experiment, run_fl_grid_experiments
+
+    labels, points = sweep_points(fast)
+    if engine == "plane":
+        res = run_fl_grid_experiments(points)
+    elif engine == "unstacked":
+        res = [
+            run_fl_experiment(**{**kw, "compressor": _stripped(kw["compressor"])})
+            for kw in points
+        ]
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return [
+        [comp, tcp_name, p, r["trained"], r["training_time_s"], r["accuracy"]]
+        for (comp, tcp_name, p), r in zip(labels, res)
+    ]
+
+
+def _csv_rows(rows):
+    """Rows as CSV text cells — exact-parity comparison, nan-aware."""
+    return [[str(x) for x in r] for r in rows]
+
+
+def run_bench(*, fast: bool = False, reps: int = 1):
+    from benchmarks import common
+
+    reps = max(int(reps), 1)
+
+    # warmup: the thinned grid through both paths compiles the cohort
+    # programs, the compressors' jits, and the baseline's eager caches;
+    # the full grid coalesces to wider plane buckets than the thinned one,
+    # so the plane path re-warms at the timed shape
+    compute_rows(fast=True, engine="plane")
+    compute_rows(fast=True, engine="unstacked")
+    if not fast:
+        compute_rows(fast=False, engine="plane")
+
+    plane_times, unstacked_times = [], []
+    rows_plane = rows_unstacked = None
+    for _ in range(reps):  # interleaved against bursty background load
+        t0 = time.time()
+        rows_plane = compute_rows(fast=fast, engine="plane")
+        plane_times.append(time.time() - t0)
+        t0 = time.time()
+        rows_unstacked = compute_rows(fast=fast, engine="unstacked")
+        unstacked_times.append(time.time() - t0)
+    grid_stats = common.last_grid_stats
+
+    parity = _csv_rows(rows_plane) == _csv_rows(rows_unstacked)
+    plane_s = float(np.median(plane_times))
+    unstacked_s = float(np.median(unstacked_times))
+    result = {
+        "bench": "compress_plane",
+        "config": {
+            "grid": "fig4_loss x tcp x compressor",
+            "compressors": COMPRESSORS,
+            "points": len(sweep_points(fast)[1]),
+            "fast": fast,
+            "reps": reps,
+        },
+        "unstacked_s": round(unstacked_s, 3),
+        "plane_s": round(plane_s, 3),
+        "speedup": round(unstacked_s / plane_s, 3),
+        "unstacked_times_s": [round(t, 3) for t in unstacked_times],
+        "plane_times_s": [round(t, 3) for t in plane_times],
+        "target_speedup": 5.0,
+        "meets_target": unstacked_s / plane_s >= 5.0,
+        "parity": parity,
+        "grid_stats": dataclasses.asdict(grid_stats) if grid_stats else None,
+    }
+    print("BENCH " + json.dumps(result))
+    return result
+
+
+def main(fast: bool = False, reps: int = 1):
+    result = run_bench(fast=fast, reps=reps)
+    if not result["parity"]:
+        print("compress_bench: PARITY FAILURE", file=sys.stderr)
+        raise SystemExit(1)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="thinned grid (CI)")
+    ap.add_argument("--reps", type=int, default=1)
+    args = ap.parse_args()
+    main(fast=args.fast, reps=args.reps)

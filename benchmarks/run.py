@@ -22,6 +22,7 @@ def main() -> None:
 
     from benchmarks import (
         adaptive_daemon,
+        compress_bench,
         env_profiles,
         fig3_latency,
         fig4_loss,
@@ -46,6 +47,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench.main),
         ("round_engine_bench", round_engine_bench.main),
         ("sweep_bench", sweep_bench.main),
+        ("compress_bench", compress_bench.main),
     ]
 
     summary = []

@@ -1,7 +1,9 @@
 from repro.compress.compressors import (
     Compressor,
+    bf16_compressor,
     compressed_bytes,
     get_compressor,
+    init_residual_plane,
     int8_compressor,
     none_compressor,
     randk_compressor,
@@ -15,5 +17,7 @@ __all__ = [
     "topk_compressor",
     "randk_compressor",
     "int8_compressor",
+    "bf16_compressor",
     "compressed_bytes",
+    "init_residual_plane",
 ]

@@ -65,12 +65,18 @@ class LocalTask:
     # inputs a (client, plan) row contributes; two rows with equal digests
     # and equal anchors compute identical deltas (coalescing key).
     plan_digest: Optional[Callable] = None
-    # fit_rows(anchors, rows, steps, mus, use_prox) ->
+    # fit_rows(anchors, rows, steps, mus, use_prox, anchor_idx=None) ->
     #     (plane_delta [Rb,...], n_examples [R], metrics [R]) where
-    # anchors is a list of R per-row params pytrees, rows is a list of R
-    # (client, plan) pairs, mus is a list of R prox coefficients, and Rb is
-    # R padded up to a bucket width (callers slice/gather the rows they
-    # own). One fused dispatch per call (chunked past _UNROLL_LIMIT steps).
+    # rows is a list of R (client, plan) pairs, mus is a list of R prox
+    # coefficients, and Rb is R padded up to a bucket width (callers
+    # slice/gather the rows they own). ``anchors`` is a list of UNIQUE
+    # per-row params pytrees and ``anchor_idx`` maps each row to its
+    # anchor — the plane stacks O(unique anchors) and gathers rows inside
+    # the jit, so few-anchor planes (most grid rounds reference 1-3
+    # distinct anchor trees) stop materializing O(rows x params) at the
+    # dispatch boundary. ``anchor_idx=None`` means anchors is per-row
+    # (len R, identity mapping). One fused dispatch per call (chunked past
+    # _UNROLL_LIMIT steps).
     fit_rows: Optional[Callable] = None
 
     def plane_dispatch_widths(self) -> List[int]:
@@ -78,6 +84,13 @@ class LocalTask:
         introspection for compile-cache bucketing)."""
         runner = getattr(self.fit_rows, "runner", None)
         return list(runner.dispatch_widths) if runner is not None else []
+
+    def plane_anchor_widths(self) -> List[int]:
+        """Padded UNIQUE-anchor widths of every plane dispatch so far —
+        the stacked-anchor transfer is O(width x params), so these sitting
+        far below the row widths is the gather formulation's win."""
+        runner = getattr(self.fit_rows, "runner", None)
+        return list(runner.anchor_widths) if runner is not None else []
 
 
 _UNROLL_LIMIT = 16  # local steps fused into one program before chunking
@@ -107,9 +120,12 @@ def _plane_sgd_runner(cohort_loss_fn, lr: float):
     batch leaf carries a leading row axis R. Summing the per-row losses
     before differentiation yields each row's own gradient in its slice
     (rows share no parameters), so one value_and_grad drives R independent
-    SGD trajectories. The anchor carries the same leading row axis (each
-    row may start from different global params — the grid engine mixes
-    sweep points in one plane); ``mu`` is a per-row prox coefficient.
+    SGD trajectories. Anchors arrive as a stack of UNIQUE params trees
+    [U, ...] plus a per-row gather index [R] (each row may start from
+    different global params — the grid engine mixes sweep points in one
+    plane — but most planes reference only 1-3 distinct anchors, so the
+    dispatch transfers O(U x params) and the [R, ...] anchor view is a
+    gather inside the jit); ``mu`` is a per-row prox coefficient.
     Clipping is per-row (clip_by_global_norm_stacked); the momentum update
     is leaf-wise and vectorizes over the stacked axis unchanged.
 
@@ -146,8 +162,12 @@ def _plane_sgd_runner(cohort_loss_fn, lr: float):
         updates, opt_state = opt.update(grads, opt_state, stacked, jnp.int32(0))
         return apply_updates(stacked, updates), opt_state, metrics
 
+    def _gather_anchor(uanchor, aidx):
+        return jax.tree.map(lambda l: jnp.take(l, aidx, axis=0), uanchor)
+
     @functools.partial(jax.jit, static_argnames=("use_prox", "steps"))
-    def fit_fused(anchor, batches, mu, use_prox, steps):
+    def fit_fused(uanchor, aidx, batches, mu, use_prox, steps):
+        anchor = _gather_anchor(uanchor, aidx)
         stacked = anchor
         opt_state = opt.init(stacked)
         metrics = {}
@@ -172,23 +192,27 @@ def _plane_sgd_runner(cohort_loss_fn, lr: float):
         return stacked, opt_state, metrics
 
     @jax.jit
-    def init_state(anchor):
-        # fresh buffers: the chunk loop donates its carry, the anchor must
-        # survive for the prox term and the final delta
-        return jax.tree.map(jnp.copy, anchor), opt.init(anchor)
+    def init_state(uanchor, aidx):
+        # materialize the gathered [R, ...] anchor once: the chunk loop
+        # donates its carry, the anchor must survive for the prox term and
+        # the final delta
+        anchor = _gather_anchor(uanchor, aidx)
+        return jax.tree.map(jnp.copy, anchor), opt.init(anchor), anchor
 
     @jax.jit
     def finalize(stacked, anchor):
         return jax.tree.map(jnp.subtract, stacked, anchor)
 
-    def run_rows(anchor, batches, mu, use_prox):
-        # anchor: pytree with leaves [R, ...]; batches: leaves [R, steps, ...]
+    def run_rows(uanchor, aidx, batches, mu, use_prox):
+        # uanchor: pytree with leaves [U, ...] (unique anchors); aidx: [R]
+        # row->anchor gather index; batches: leaves [R, steps, ...]
         leaves = jax.tree.leaves(batches)
         r, steps = leaves[0].shape[:2]
         run_rows.dispatch_widths.append(int(r))
+        run_rows.anchor_widths.append(int(jax.tree.leaves(uanchor)[0].shape[0]))
         if steps <= _UNROLL_LIMIT:
-            return fit_fused(anchor, batches, mu, use_prox, steps)
-        stacked, opt_state = init_state(anchor)
+            return fit_fused(uanchor, aidx, batches, mu, use_prox, steps)
+        stacked, opt_state, anchor = init_state(uanchor, aidx)
         metrics = {}
         s = 0
         while s < steps:
@@ -201,6 +225,7 @@ def _plane_sgd_runner(cohort_loss_fn, lr: float):
         return finalize(stacked, anchor), metrics
 
     run_rows.dispatch_widths = []
+    run_rows.anchor_widths = []
     return run_rows
 
 
@@ -209,7 +234,7 @@ def _unstack_metrics(stacked: Dict[str, Any], n: int) -> List[Dict[str, float]]:
     return [{k: float(v[i]) for k, v in host.items()} for i in range(n)]
 
 
-def _pad_rows(anchors: Sequence[Any], rows: Sequence[Any], mus: Sequence[float]):
+def _pad_rows(rows: Sequence[Any], mus: Sequence[float], aidx: Sequence[int]):
     """Pad a row list up to its bucket width by repeating row 0 (results
     for padding rows are computed and discarded; row independence keeps
     them from touching real rows)."""
@@ -217,10 +242,26 @@ def _pad_rows(anchors: Sequence[Any], rows: Sequence[Any], mus: Sequence[float])
     rb = bucket_rows(r)
     pad = rb - r
     return (
-        list(anchors) + [anchors[0]] * pad,
         list(rows) + [rows[0]] * pad,
         list(mus) + [float(mus[0])] * pad,
+        list(aidx) + [int(aidx[0])] * pad,
     )
+
+
+def _pad_anchors(anchors: Sequence[Any]):
+    """Pad the unique-anchor list up to its bucket width (anchor 0
+    repeated) so anchor counts ride the same compile-cache ladder as row
+    counts; padding anchors are never gathered by real rows."""
+    u = len(anchors)
+    return list(anchors) + [anchors[0]] * (bucket_rows(u) - u)
+
+
+def _anchor_args(anchors: Sequence[Any], anchor_idx, r: int):
+    """Normalize (anchors, anchor_idx) into the runner's gather form:
+    anchor_idx=None means anchors is per-row (identity mapping)."""
+    if anchor_idx is None:
+        anchor_idx = list(range(r))
+    return _pad_anchors(anchors), list(anchor_idx)
 
 
 def _sgd_local_fit(loss_fn, lr: float, batch_size: int):
@@ -275,9 +316,10 @@ def _sgd_plane_fns(cohort_loss_fn, lr: float, batch_size: int):
     def plan_digest(client: "EdgeClient", plan: np.ndarray):
         return (id(client.dataset), plan.tobytes())
 
-    def fit_rows(anchors, rows, steps, mus, use_prox):
+    def fit_rows(anchors, rows, steps, mus, use_prox, anchor_idx=None):
         r = len(rows)
-        anchors_p, rows_p, mus_p = _pad_rows(anchors, rows, mus)
+        anchors_p, aidx = _anchor_args(anchors, anchor_idx, r)
+        rows_p, mus_p, aidx_p = _pad_rows(rows, mus, aidx)
         batches = {
             "images": jnp.asarray(
                 np.stack([c.dataset.images[p] for c, p in rows_p])
@@ -288,6 +330,7 @@ def _sgd_plane_fns(cohort_loss_fn, lr: float, batch_size: int):
         }
         plane, last = runner(
             tree_stack(anchors_p),
+            jnp.asarray(np.asarray(aidx_p, np.int32)),
             batches,
             jnp.asarray(np.asarray(mus_p, np.float32)),
             use_prox,
@@ -300,7 +343,8 @@ def _sgd_plane_fns(cohort_loss_fn, lr: float, batch_size: int):
 
 def _plane_batched_local_fit(plan_fit, fit_rows):
     """Default cohort-batched fit on top of the plane API: every row shares
-    the cohort's single anchor; the plane is sliced back to cohort width."""
+    the cohort's single anchor (stacked once, gathered per row inside the
+    jit); the plane is sliced back to cohort width."""
 
     def fit_cohort(
         params,
@@ -312,7 +356,8 @@ def _plane_batched_local_fit(plan_fit, fit_rows):
         plans = plan_fit(clients, steps, rng)
         rows = list(zip(clients, plans))
         plane, n_examples, metrics = fit_rows(
-            [params] * len(rows), rows, steps, [prox_mu] * len(rows), prox_mu > 0
+            [params], rows, steps, [prox_mu] * len(rows), prox_mu > 0,
+            anchor_idx=[0] * len(rows),
         )
         stacked = jax.tree.map(lambda l: l[: len(rows)], plane)
         return stacked, n_examples, metrics
@@ -412,9 +457,10 @@ def lm_task(cfg, lr: float = 1e-3, batch_size: int = 4, seq: int = 64) -> LocalT
     def plan_digest(client, plan):
         return (client.client_id, tuple(plan))
 
-    def fit_rows(anchors, rows, steps, mus, use_prox):
+    def fit_rows(anchors, rows, steps, mus, use_prox, anchor_idx=None):
         r = len(rows)
-        anchors_p, rows_p, mus_p = _pad_rows(anchors, rows, mus)
+        anchors_p, aidx = _anchor_args(anchors, anchor_idx, r)
+        rows_p, mus_p, aidx_p = _pad_rows(rows, mus, aidx)
         per_row = []
         for c, plan in rows_p:
             bs = [
@@ -430,6 +476,7 @@ def lm_task(cfg, lr: float = 1e-3, batch_size: int = 4, seq: int = 64) -> LocalT
         }
         plane, last = runner(
             tree_stack(anchors_p),
+            jnp.asarray(np.asarray(aidx_p, np.int32)),
             batches,
             jnp.asarray(np.asarray(mus_p, np.float32)),
             use_prox,

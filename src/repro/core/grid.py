@@ -32,6 +32,20 @@ digest, steps, mu) — so shared trajectories are computed once per round,
 and eval is memoized on the same provenance. Points diverge (different
 deliveries, different aggregation) and their rows automatically stop
 coalescing; correctness never depends on the sweep's structure.
+
+Compressed points participate in sharing too: plane-capable compressors
+(deterministic ``fingerprint`` + ``compress_plane``) evolve a RESIDUAL
+provenance key alongside the params key — equal (compressor, prior
+residual, rows, delivering slots) imply bitwise-equal error-feedback
+planes, so the aggregation digest extends with a residual-digest term
+instead of marking the point opaque. Only stateful compressors (randk's
+rotating counter) still force opacity.
+
+Anchor transfer is O(unique anchors), not O(rows): each dispatch stacks
+the distinct anchor trees referenced by its rows (keyed by params
+provenance — equal keys are bitwise-equal params) and rows gather their
+anchor inside the jit (``fit_rows(anchor_idx=...)``). Most grid rounds
+reference 1-3 distinct anchors across a 64-row plane.
 """
 
 from __future__ import annotations
@@ -77,8 +91,11 @@ class GridStats:
     fit_rows_total: int = 0  # rows requested across all points
     fit_rows_unique: int = 0  # rows actually dispatched (pre-padding)
     plane_dispatches: int = 0
+    anchor_rows_stacked: int = 0  # unique anchors stacked across dispatches
     evals_requested: int = 0
     evals_computed: int = 0
+    compress_requested: int = 0  # compressed point-rounds
+    compress_computed: int = 0  # heavy compress_rows programs actually run
 
 
 @dataclass
@@ -142,8 +159,12 @@ def run_fl_grid(
         return v
 
     # params provenance per point: equal keys => bitwise-equal global
-    # params (same init, same aggregation chain over the same rows)
+    # params (same init, same aggregation chain over the same rows).
+    # res_keys mirrors it for the compression error-feedback plane: equal
+    # keys => bitwise-equal residual state (same compressor, same chain of
+    # (rows, delivering slots) updates from zeros).
     params_keys: List[int] = []
+    res_keys: List[int] = []
     eval_cache: Dict[Tuple[int, int], Dict[str, float]] = {}
     servers: List[FederatedServer] = []
 
@@ -175,6 +196,7 @@ def run_fl_grid(
             )
         )
         params_keys.append(intern(("init", id(task), p.config.seed)))
+        res_keys.append(intern(("res0", servers[-1].compressor.fingerprint)))
 
     plane_ok = (
         task.plan_fit is not None
@@ -197,6 +219,7 @@ def run_fl_grid(
                 # no plane path for this point/task: run it standalone
                 stacked, deltas, weights, per_metrics = srv.execute_fit(job)
                 params_keys[i] = intern(("opaque", next(nonce)))
+                res_keys[i] = intern(("opaque", next(nonce)))
                 srv.finish_round(job, stacked, deltas, weights, per_metrics)
                 continue
             plans = task.plan_fit(job.clients, job.steps, srv.rng)
@@ -213,7 +236,9 @@ def run_fl_grid(
             mu = float(job.prox_mu)
             gkey = (job.steps, mu > 0)
             g = groups.setdefault(
-                gkey, {"index": {}, "anchors": [], "rows": [], "mus": []}
+                gkey,
+                {"index": {}, "aindex": {}, "anchors": [], "aidx": [],
+                 "rows": [], "mus": []},
             )
             idxs, row_keys = [], []
             for client, plan in zip(job.clients, plans):
@@ -231,7 +256,14 @@ def run_fl_grid(
                 if j is None:
                     j = len(g["rows"])
                     g["index"][rkey] = j
-                    g["anchors"].append(servers[i].global_params)
+                    # anchors dedupe on params provenance (equal keys =>
+                    # bitwise-equal params); rows carry a gather index
+                    ai = g["aindex"].get(params_keys[i])
+                    if ai is None:
+                        ai = len(g["anchors"])
+                        g["aindex"][params_keys[i]] = ai
+                        g["anchors"].append(servers[i].global_params)
+                    g["aidx"].append(ai)
                     g["rows"].append((client, plan))
                     g["mus"].append(mu)
                 idxs.append(j)
@@ -246,25 +278,84 @@ def run_fl_grid(
             planes = []
             for s in range(0, len(rows), max_plane_rows):
                 sub = slice(s, s + max_plane_rows)
+                # chunk-local anchor table: stack only the anchors this
+                # chunk's rows reference (O(unique anchors x params)
+                # transfer, not O(rows x params))
+                local: Dict[int, int] = {}
+                anchors_sub: List[Any] = []
+                aidx_sub: List[int] = []
+                for a in g["aidx"][sub]:
+                    la = local.get(a)
+                    if la is None:
+                        la = len(anchors_sub)
+                        local[a] = la
+                        anchors_sub.append(g["anchors"][a])
+                    aidx_sub.append(la)
+                stats.anchor_rows_stacked += len(anchors_sub)
                 plane, n_ex, mets = task.fit_rows(
-                    g["anchors"][sub], rows[sub], steps, g["mus"][sub], use_prox
+                    anchors_sub, rows[sub], steps, g["mus"][sub], use_prox,
+                    anchor_idx=aidx_sub,
                 )
                 planes.append((plane, n_ex, mets))
                 stats.plane_dispatches += 1
             g["planes"] = planes
 
         # --- per-point post phase: scatter, aggregate, advance provenance ---
+        # round-scoped memo for the heavy compress_rows program: points
+        # whose compression provenance coincides (same compressor, same
+        # residual chain, same rows on the same client slots) share ONE
+        # top-k/quantize pass; each point still scatters its own residual
+        # plane (cheap, donated)
+        comp_memo: Dict[tuple, Any] = {}
         for i, job, gkey, idxs, row_keys in placements:
             srv = servers[i]
             stacked, weights, per_metrics = _gather_rows(
                 groups[gkey]["planes"], max_plane_rows, idxs
             )
-            sharable = (
-                coalesce
-                and srv.compressor.name == "none"
-                and bool(srv.strategy.agg_fingerprint)
+            comp = srv.compressor
+            # a compressor is provenance-shareable when its transform is a
+            # deterministic function of (delta, residual) — fingerprinted
+            # and plane-capable, so finish_round takes the stacked path
+            comp_ok = comp.name == "none" or (
+                bool(comp.fingerprint) and comp.compress_plane is not None
             )
+            sharable = (
+                coalesce and comp_ok and bool(srv.strategy.agg_fingerprint)
+            )
+            precompressed = False
             if sharable:
+                comp_term = None
+                if comp.name != "none":
+                    # residual-digest term: the decompressed deltas (and
+                    # the post-round residual plane) are determined by
+                    # (compressor, prior residual provenance, the rows'
+                    # content, which client slots they land on)
+                    slots = tuple(srv.client_slots(job.clients))
+                    ckey = (
+                        comp.fingerprint, res_keys[i], tuple(row_keys), slots
+                    )
+                    stats.compress_requested += 1
+                    plane_fn = comp.compress_plane
+                    slots_j = jnp.asarray(slots, jnp.int32)
+                    hit = comp_memo.get(ckey)
+                    if hit is None:
+                        rows = plane_fn.gather_rows(
+                            srv._ensure_residual_plane(), slots_j
+                        )
+                        hit = plane_fn.compress_rows(stacked, rows)
+                        comp_memo[ckey] = hit
+                        stats.compress_computed += 1
+                    x2_t, deq_t = hit
+                    srv._residual_plane = plane_fn.scatter_rows(
+                        x2_t, deq_t, srv._ensure_residual_plane(), slots_j
+                    )
+                    stacked = plane_fn.finalize(stacked, deq_t)
+                    precompressed = True
+                    comp_term = ("comp", comp.fingerprint, res_keys[i], slots)
+                    res_keys[i] = intern(
+                        ("res", res_keys[i], comp.fingerprint,
+                         tuple(row_keys), slots)
+                    )
                 digest = (
                     "agg",
                     params_keys[i],
@@ -278,10 +369,15 @@ def run_fl_grid(
                         if srv.config.async_mode
                         else None
                     ),
+                    comp_term,
                 )
                 params_keys[i] = intern(digest)
             else:
                 params_keys[i] = intern(("opaque", next(nonce)))
-            srv.finish_round(job, stacked, None, weights, per_metrics)
+                res_keys[i] = intern(("opaque", next(nonce)))
+            srv.finish_round(
+                job, stacked, None, weights, per_metrics,
+                precompressed=precompressed,
+            )
 
     return GridResult([s.history for s in servers], stats, servers)

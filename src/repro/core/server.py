@@ -32,11 +32,11 @@ import jax
 import numpy as np
 
 from repro.chaos import ChaosSchedule
-from repro.compress import Compressor, none_compressor
+from repro.compress import Compressor, init_residual_plane, none_compressor
 from repro.core.client import EdgeClient, LocalTask
 from repro.core.strategy import Strategy
 from repro.transport import LinkProfile, TcpParams, client_round as analytic_round
-from repro.transport.des import sim_client_round, sim_cohort_round
+from repro.transport.des import sim_client_round, sim_cohort_round, sim_grid_round
 from repro.utils import tree_stack, tree_unstack
 
 
@@ -133,6 +133,17 @@ class ServerConfig:
     # distributions but with a different draw order, so the two engines
     # are distribution-equivalent, not draw-for-draw identical.
     batched: bool = False
+    # transport engine selector (stochastic mode only). "default" keeps
+    # sim_cohort_round's draw discipline and bills the compressed payload
+    # in BOTH directions (the historical modeling). "fused_transport"
+    # routes the cohort through sim_grid_round's shared-rng plane
+    # (ROADMAP PR 3 follow-up) with per-row payload bytes: uploads carry
+    # the COMPRESSED wire size, downloads the full model size. For the
+    # single-scenario server the plane is draw-for-draw identical to the
+    # default path — the flag's behavioral delta is the asymmetric
+    # payload modeling, and it is the entry point a grid-level driver
+    # extends to an [S*C]-row plane across sweep points.
+    engine: str = "default"
 
 
 class FederatedServer:
@@ -169,6 +180,13 @@ class FederatedServer:
         self.sim_time = 0.0
         self.consecutive_failures = 0
         self.terminated = False
+        # plane-resident error feedback: one f32 residual row per client,
+        # device-resident, gathered/scattered by slot inside the
+        # compressor's donated jit (lazily allocated on the first
+        # compressed stacked round). The sequential engine keeps using
+        # per-client EdgeClient.residual.
+        self._residual_plane = None
+        self._client_slot = {id(c): i for i, c in enumerate(self.clients)}
 
     # ------------------------------------------------------------------
     def _client_transport(
@@ -216,13 +234,32 @@ class FederatedServer:
             [cfg.local_steps * c.step_time(cfg.base_step_cost) for c in cohort]
         )
         if cfg.stochastic:
+            connected = np.array([c.connected for c in cohort], bool)
+            if cfg.engine == "fused_transport":
+                # opt-in shared-rng plane (sim_grid_round fused mode).
+                # At S=1 the plane samples draw-for-draw like the default
+                # path; what changes is the payload modeling — per-row
+                # byte arrays carry the compressed upload size and the
+                # full-model download size separately.
+                out = sim_grid_round(
+                    self.tcp,
+                    [links],
+                    update_bytes=np.full((1, len(cohort)), payload_bytes, np.int64),
+                    download_bytes=np.full(
+                        (1, len(cohort)), self.task.update_bytes, np.int64
+                    ),
+                    local_train_times=local_times[None],
+                    rng=self.rng,
+                    connected=connected[None],
+                )
+                return out.success[0], out.time[0], out.reconnects[0].astype(float)
             out = sim_cohort_round(
                 self.tcp,
                 links,
                 update_bytes=payload_bytes,
                 local_train_times=local_times,
                 rng=self.rng,
-                connected=np.array([c.connected for c in cohort], bool),
+                connected=connected,
             )
             return out.success, out.time, out.reconnects.astype(float)
         outs = [
@@ -348,26 +385,57 @@ class FederatedServer:
                 per_metrics.append(m)
         return stacked, deltas, weights, per_metrics
 
-    def finish_round(self, job: FitJob, stacked, deltas, weights, per_metrics) -> None:
-        """Compression, bookkeeping, aggregation, clock advance, eval."""
+    def _ensure_residual_plane(self):
+        if self._residual_plane is None:
+            self._residual_plane = init_residual_plane(
+                self.global_params, len(self.clients)
+            )
+        return self._residual_plane
+
+    def client_slots(self, clients: List[EdgeClient]) -> List[int]:
+        """Residual-plane row indices for a list of (delivering) clients."""
+        return [self._client_slot[id(c)] for c in clients]
+
+    def finish_round(
+        self, job: FitJob, stacked, deltas, weights, per_metrics,
+        precompressed: bool = False,
+    ) -> None:
+        """Compression, bookkeeping, aggregation, clock advance, eval.
+
+        ``precompressed=True`` means the caller (the grid engine) already
+        ran plane compression — possibly shared across sweep points with
+        equal compression provenance — and ``stacked`` holds decompressed
+        deltas with this server's residual plane already advanced."""
         cfg = self.config
         rnd = job.rnd
         record = job.record
         dclients = job.clients
         arrivals = job.arrivals
 
-        # compression: error feedback is per-client state, so any real
-        # compressor unstacks the cohort; the wire-identity "none"
-        # compressor keeps the stacked hot path intact.
-        if self.compressor.name != "none":
-            if stacked is not None:
-                deltas = tree_unstack(stacked)
-                stacked = None
-            compressed = []
-            for client, delta in zip(dclients, deltas):
-                payload, client.residual = self.compressor.compress(delta, client.residual)
-                compressed.append(self.compressor.decompress(payload))
-            deltas = compressed
+        # compression: the plane path keeps the whole cohort stacked —
+        # error-feedback residuals live in a [N_clients, ...] device plane
+        # and the compressor's donated jit gathers the delivering rows,
+        # compresses, and scatters new residuals back (bitwise identical
+        # to the per-client loop). Compressors without a plane twin
+        # (stateful randk) or unstacked deltas fall back to the loop.
+        if self.compressor.name != "none" and not precompressed:
+            plane_fn = self.compressor.compress_plane
+            if stacked is not None and plane_fn is not None:
+                slots = np.asarray(self.client_slots(dclients), np.int32)
+                stacked, self._residual_plane = plane_fn(
+                    stacked, self._ensure_residual_plane(), slots
+                )
+            else:
+                if stacked is not None:
+                    deltas = tree_unstack(stacked)
+                    stacked = None
+                compressed = []
+                for client, delta in zip(dclients, deltas):
+                    payload, client.residual = self.compressor.compress(
+                        delta, client.residual
+                    )
+                    compressed.append(self.compressor.decompress(payload))
+                deltas = compressed
 
         for client, m in zip(dclients, per_metrics):
             client.rounds_participated += 1

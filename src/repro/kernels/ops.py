@@ -20,7 +20,12 @@ import jax.numpy as jnp
 
 from repro.kernels.fedavg_reduce import fedavg_reduce_flat
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.quantize import dequantize_flat, quantize_stochastic_flat
+from repro.kernels.quantize import (
+    dequantize_flat,
+    downcast_bf16_rows_flat,
+    quantize_rows_flat,
+    quantize_stochastic_flat,
+)
 from repro.kernels.swiglu import swiglu_fused
 from repro.utils import flatten_to_vector, unflatten_from_vector
 
@@ -87,6 +92,25 @@ def quantize_tree(tree, key, *, tile=4096, interpret=False):
     uniform = jax.random.uniform(key, vec.shape, jnp.float32)
     q = quantize_stochastic_flat(vec, uniform, scale, tile=tile, interpret=interpret)
     return {"q": q, "scale": scale}
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def quantize_rows(x, scales, *, tile=2048, interpret=False):
+    """Row-stacked int8 quantization: x [R, N] f32, scales [R] -> int8 [R, N].
+
+    Deterministic round-half-up — the plane compressors' parity contract
+    (stacked == sequential per-client, bitwise) rules out stochastic bits.
+    On TPU this is the compiled Pallas kernel; off-TPU callers should use
+    ``quantize_rows_ref`` (same math as one fused XLA elementwise pass)
+    rather than paying the interpreter.
+    """
+    return quantize_rows_flat(x, scales.astype(jnp.float32), tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def downcast_bf16_rows(x, *, tile=2048, interpret=False):
+    """Row-stacked f32 -> bf16 downcast (the bf16 wire compressor)."""
+    return downcast_bf16_rows_flat(x, tile=tile, interpret=interpret)
 
 
 def dequantize_tree(payload, template):

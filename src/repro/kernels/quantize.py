@@ -1,12 +1,20 @@
-"""Pallas kernel: int8 quantization with stochastic rounding.
+"""Pallas kernels: int8 / bf16 quantization for the compression front-end.
 
-Compression front-end for the constrained link (repro.compress): quantize
-q = clip(round_sr(x/scale)) where round_sr(y) = floor(y + u), u ~ U[0,1)
-supplied as precomputed uniform bits (keeps the kernel deterministic and
-oracle-checkable; on real TPU the bits would come from pltpu.prng_*).
+Two families serve the constrained link (repro.compress):
 
-Grid tiles the flattened tensor; scale is per-tensor, computed by the
-caller (ops.py) — the kernel is pure elementwise + cast, VMEM-tiled.
+- ``quantize_stochastic_flat``: per-tensor int8 with stochastic rounding,
+  q = clip(round_sr(x/scale)) where round_sr(y) = floor(y + u), u ~ U[0,1)
+  supplied as precomputed uniform bits (keeps the kernel deterministic and
+  oracle-checkable; on real TPU the bits would come from pltpu.prng_*).
+- ``quantize_rows_flat`` / ``downcast_bf16_rows_flat``: ROW-STACKED int8 /
+  bf16 for the plane-resident compressors — one row per (scenario, client)
+  plane slot, per-row scales, deterministic round-half-up so the stacked
+  path is bitwise identical to sequential per-client compression (the
+  error-feedback residual makes any deterministic rounding unbiased over
+  rounds).
+
+Grids tile the flattened tensor(s); scales are computed by the caller —
+the kernels are pure elementwise + cast, VMEM-tiled.
 """
 
 from __future__ import annotations
@@ -50,3 +58,63 @@ def quantize_stochastic_flat(x, uniform, scale, *, tile: int = 4096, interpret: 
 
 def dequantize_flat(q, scale):
     return q.astype(jnp.float32) * scale
+
+
+def _quant_rows_kernel(x_ref, s_ref, q_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = s_ref[0, 0]
+    y = x / scale
+    q = jnp.floor(y + 0.5)  # deterministic round-half-up (parity contract)
+    q_ref[...] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def quantize_rows_flat(x, scales, *, tile: int = 2048, interpret: bool = False):
+    """x [R, N] f32, scales [R] (per-row quantum) -> int8 [R, N].
+
+    One grid cell per (row, tile); each row reads its own scale through a
+    (1, 1) block. Deterministic rounding: the plane compressors need the
+    kernel output bitwise equal to the sequential per-client reference.
+    """
+    R, N = x.shape
+    pad = (-N) % tile
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    Np = x.shape[1]
+    q = pl.pallas_call(
+        _quant_rows_kernel,
+        grid=(R, Np // tile),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda r, i: (r, i)),
+            pl.BlockSpec((1, 1), lambda r, i: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda r, i: (r, i)),
+        out_shape=jax.ShapeDtypeStruct((R, Np), jnp.int8),
+        interpret=interpret,
+    )(x, scales.reshape(R, 1))
+    return q[:, :N]
+
+
+def dequantize_rows(q, scales):
+    return q.astype(jnp.float32) * scales[:, None]
+
+
+def _bf16_rows_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32).astype(jnp.bfloat16)
+
+
+def downcast_bf16_rows_flat(x, *, tile: int = 2048, interpret: bool = False):
+    """x [R, N] f32 -> bf16 [R, N] (round-to-nearest-even downcast)."""
+    R, N = x.shape
+    pad = (-N) % tile
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    Np = x.shape[1]
+    out = pl.pallas_call(
+        _bf16_rows_kernel,
+        grid=(R, Np // tile),
+        in_specs=[pl.BlockSpec((1, tile), lambda r, i: (r, i))],
+        out_specs=pl.BlockSpec((1, tile), lambda r, i: (r, i)),
+        out_shape=jax.ShapeDtypeStruct((R, Np), jnp.bfloat16),
+        interpret=interpret,
+    )(x)
+    return out[:, :N]

@@ -39,6 +39,16 @@ def quantize_stochastic_ref(x, uniform, scale):
     return jnp.clip(jnp.floor(y + uniform), -127.0, 127.0).astype(jnp.int8)
 
 
+def quantize_rows_ref(x, scales):
+    """x [R, N], scales [R] -> int8 [R, N]; deterministic round-half-up."""
+    y = x.astype(jnp.float32) / scales[:, None]
+    return jnp.clip(jnp.floor(y + 0.5), -127.0, 127.0).astype(jnp.int8)
+
+
+def downcast_bf16_rows_ref(x):
+    return x.astype(jnp.float32).astype(jnp.bfloat16)
+
+
 def swiglu_ref(x, w_gate, w_up, w_down):
     g = (x.astype(jnp.float32) @ w_gate.astype(jnp.float32))
     u = (x.astype(jnp.float32) @ w_up.astype(jnp.float32))

@@ -635,16 +635,19 @@ def sim_cohort_round(
 
     Vector twin of ``sim_client_round``: every stage sampled for all
     clients at once. ``connected`` and ``local_train_times`` are
-    [C]-shaped. With ``trace=True`` the outcome carries sparse per-client
-    event counts (see _TRACE_FIELDS) instead of an ordered event list.
+    [C]-shaped. ``update_bytes``/``download_bytes`` are scalars or [C]
+    arrays — per-row payload sizes (e.g. compressed wire bytes) flow into
+    the per-row transfer mechanics. With ``trace=True`` the outcome
+    carries sparse per-client event counts (see _TRACE_FIELDS) instead of
+    an ordered event list.
     """
     download_bytes = update_bytes if download_bytes is None else download_bytes
     k = len(links)
     alive, t, reconnects, bytes_acked, counts = _sim_rows(
         _TcpArrays.broadcast(tcp, k),
         _LinkArrays.from_links(links),
-        up_bytes=np.full(k, update_bytes, np.int64),
-        down_bytes=np.full(k, download_bytes, np.int64),
+        up_bytes=np.broadcast_to(np.asarray(update_bytes, np.int64), (k,)),
+        down_bytes=np.broadcast_to(np.asarray(download_bytes, np.int64), (k,)),
         local_train_times=np.asarray(local_train_times, float),
         rng=rng,
         connected=np.asarray(connected, bool),
@@ -679,18 +682,23 @@ def sim_grid_round(
       throughput, not for per-point reproduction).
 
     ``tcps`` is one TcpParams or a length-S sequence; ``links`` is [S][C];
-    ``update_bytes``/``download_bytes`` are scalars or length-S;
+    ``update_bytes``/``download_bytes`` are scalars, length-S, or [S, C]
+    (per-row payload sizes — compressed wire bytes differ per scenario
+    point, and the per-row transfer arrays carry them);
     ``local_train_times``/``connected`` are [S, C]. All outputs are [S, C].
     """
     S = len(links)
     C = len(links[0]) if S else 0
     tcp_list = [tcps] * S if isinstance(tcps, TcpParams) else list(tcps)
-    up = np.broadcast_to(np.asarray(update_bytes, np.int64), (S,))
-    down = (
-        up
-        if download_bytes is None
-        else np.broadcast_to(np.asarray(download_bytes, np.int64), (S,))
-    )
+
+    def _bytes_grid(b):
+        b = np.asarray(b, np.int64)
+        if b.ndim == 2:
+            return b.reshape(S, C)
+        return np.broadcast_to(b.reshape(-1, 1) if b.ndim == 1 else b, (S, C))
+
+    up = _bytes_grid(update_bytes)
+    down = up if download_bytes is None else _bytes_grid(download_bytes)
     local_train_times = np.asarray(local_train_times, float).reshape(S, C)
     connected = np.asarray(connected, bool).reshape(S, C)
 
@@ -702,11 +710,11 @@ def sim_grid_round(
             sim_cohort_round(
                 tcp_list[s],
                 links[s],
-                update_bytes=int(up[s]),
+                update_bytes=up[s],
                 local_train_times=local_train_times[s],
                 rng=rngs[s],
                 connected=connected[s],
-                download_bytes=int(down[s]),
+                download_bytes=down[s],
                 trace=trace,
             )
             for s in range(S)
@@ -728,8 +736,8 @@ def sim_grid_round(
     alive, t, reconnects, bytes_acked, counts = _sim_rows(
         ta,
         _LinkArrays.from_links(flat_links),
-        up_bytes=np.repeat(up, C),
-        down_bytes=np.repeat(down, C),
+        up_bytes=up.reshape(-1),
+        down_bytes=down.reshape(-1),
         local_train_times=local_train_times.reshape(-1),
         rng=rng,
         connected=connected.reshape(-1),
