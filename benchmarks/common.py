@@ -108,6 +108,9 @@ def _make_point(
     local_steps: int = LOCAL_STEPS,
     batched: bool = True,
     compressor=None,
+    stochastic: bool = False,
+    rng_streams: str = "single",
+    engine: str = "default",
 ) -> GridPoint:
     clients = [EdgeClient(i, dataset=s) for i, s in enumerate(_shared_shards(seed))]
     return GridPoint(
@@ -116,7 +119,8 @@ def _make_point(
         tcp=tcp,
         chaos=chaos or ChaosSchedule(link),
         config=ServerConfig(
-            rounds=rounds, local_steps=local_steps, seed=seed, batched=batched
+            rounds=rounds, local_steps=local_steps, seed=seed, batched=batched,
+            stochastic=stochastic, rng_streams=rng_streams, engine=engine,
         ),
         compressor=_shared_compressor(compressor),
     )
@@ -151,14 +155,22 @@ def run_fl_experiment(**point) -> Dict[str, float]:
     return _summarize(server.run().summary(), p.config.rounds)
 
 
-def run_fl_grid_experiments(points: List[dict], *, return_stats: bool = False):
+def run_fl_grid_experiments(
+    points: List[dict], *, return_stats: bool = False, transport: str = "per_point"
+):
     """Evaluate many ``run_fl_experiment`` configurations as ONE grid.
 
     Each entry of ``points`` is a kwargs dict for run_fl_experiment;
-    results come back in order, bit-identical to per-point runs."""
+    results come back in order, bit-identical to per-point runs.
+    ``transport`` forwards to ``run_fl_grid``: "per_point" (each point
+    samples its own transport), "parity" (one sim_grid_round per round on
+    per-point streams — still bit-identical), or "fused" (one shared-rng
+    lockstep plane per round — throughput mode, distribution-equivalent)."""
     global last_grid_stats
     gpoints = [_make_point(**kw) for kw in points]
-    res = run_fl_grid(_shared_task(), gpoints, eval_data=_shared_eval_data())
+    res = run_fl_grid(
+        _shared_task(), gpoints, eval_data=_shared_eval_data(), transport=transport
+    )
     last_grid_stats = res.stats
     out = [
         _summarize(h.summary(), p.config.rounds)
@@ -167,11 +179,14 @@ def run_fl_grid_experiments(points: List[dict], *, return_stats: bool = False):
     return (out, res.stats) if return_stats else out
 
 
-def run_points(points: List[dict], engine: str = "grid") -> List[Dict[str, float]]:
+def run_points(
+    points: List[dict], engine: str = "grid", transport: str = "per_point"
+) -> List[Dict[str, float]]:
     """Run a sweep through the selected engine: ``grid`` (scenario-parallel
-    plane) or ``per_point`` (one server per point, the pre-grid loop)."""
+    plane, with ``transport`` selecting where stochastic transport is
+    sampled) or ``per_point`` (one server per point, the pre-grid loop)."""
     if engine == "grid":
-        return run_fl_grid_experiments(points)
+        return run_fl_grid_experiments(points, transport=transport)
     if engine == "per_point":
         return [run_fl_experiment(**kw) for kw in points]
     raise ValueError(f"unknown engine {engine!r}")

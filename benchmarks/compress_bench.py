@@ -19,6 +19,14 @@ telemetry, and EXACT row parity (CSV-text equality, nan-aware): plane
 compression is bitwise identical to sequential per-client compression, so
 any drift is a bug and exits non-zero.
 
+A second section benchmarks the FUSED TRANSPORT PLANE on the same
+compressed grid with stochastic (DES) transport and split RNG streams:
+per-point transport loop vs one shared-rng ``sim_grid_round`` per round,
+each plane row billing its point's ASYMMETRIC payloads — the compressor's
+exact upload wire size, the full-model download. The parity flag asserts
+``transport="parity"`` (same single call, per-point streams) reproduces
+the per-point loop bitwise.
+
 Methodology matches sweep_bench: one shared task + shared compressor
 instances (warm jit caches), a thinned warmup grid through both paths
 before timing, interleaved reps, median wall time reported.
@@ -93,6 +101,39 @@ def _csv_rows(rows):
     return [[str(x) for x in r] for r in rows]
 
 
+def stochastic_points(fast: bool = False):
+    """The compressed (loss x tcp x compressor) grid with event-granular
+    DES transport on split streams: every plane row carries its point's
+    compressed upload wire size and full-model download bytes."""
+    _, points = sweep_points(fast)
+    return [dict(kw, stochastic=True, rng_streams="split") for kw in points]
+
+
+def run_fused_transport_bench(*, fast: bool = False, reps: int = 1):
+    """Fused transport plane vs per-point transport loop on the compressed
+    stochastic grid (shared BENCH schema via
+    ``sweep_bench.fused_transport_section``). Each scenario's upload
+    bills its compressor's exact wire size, downloads the full model —
+    the asymmetric-payload convention."""
+    import jax
+
+    from benchmarks.common import N_CLIENTS, _shared_compressor, _shared_task
+    from benchmarks.sweep_bench import fused_transport_section
+
+    task = _shared_task()
+    template = task.init_fn(jax.random.PRNGKey(0))
+    _, raw = sweep_points(fast)
+    return fused_transport_section(
+        stochastic_points(fast),
+        "compressed fig4 stochastic (DES, split streams)",
+        [kw["tcp"] for kw in raw],
+        [[kw["link"]] * N_CLIENTS for kw in raw],
+        [_shared_compressor(kw["compressor"]).wire_bytes(template) for kw in raw],
+        [task.update_bytes] * len(raw),
+        reps=reps,
+    )
+
+
 def run_bench(*, fast: bool = False, reps: int = 1):
     from benchmarks import common
 
@@ -139,7 +180,9 @@ def run_bench(*, fast: bool = False, reps: int = 1):
         "meets_target": unstacked_s / plane_s >= 5.0,
         "parity": parity,
         "grid_stats": dataclasses.asdict(grid_stats) if grid_stats else None,
+        "fused_transport": run_fused_transport_bench(fast=fast, reps=reps),
     }
+    result["parity"] = result["parity"] and result["fused_transport"]["parity"]
     print("BENCH " + json.dumps(result))
     return result
 

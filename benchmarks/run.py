@@ -17,8 +17,12 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="thinned sweeps")
-    ap.add_argument("--only", default=None, help="run one benchmark by name")
+    ap.add_argument(
+        "--only", default=None,
+        help="run selected benchmarks (comma-separated names)",
+    )
     args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
         adaptive_daemon,
@@ -50,10 +54,18 @@ def main() -> None:
         ("compress_bench", compress_bench.main),
     ]
 
+    if only is not None:
+        unknown = only - {name for name, _ in benches}
+        if unknown:
+            # a typo here would silently skip a bench (and its parity
+            # gate) while CI stays green
+            print(f"unknown benchmark(s): {sorted(unknown)}", file=sys.stderr)
+            sys.exit(2)
+
     summary = []
     failed = 0
     for name, fn in benches:
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         print(f"\n##### {name} #####")
         t0 = time.time()
@@ -63,6 +75,11 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             status = f"FAIL:{type(e).__name__}"
+            failed += 1
+        except SystemExit as e:
+            # parity gates exit via SystemExit; keep per-bench isolation
+            # so the remaining benches and the summary still run
+            status = f"FAIL:exit{e.code}"
             failed += 1
         summary.append((name, round(time.time() - t0, 1), status))
 

@@ -10,6 +10,15 @@ the same fixed seed:
   its own RNG stream, the union of local-training rows executes as one
   fused plane dispatch with provenance coalescing, and eval is memoized.
 
+A second section benchmarks the FUSED TRANSPORT PLANE on a fig4-size
+STOCHASTIC (DES) grid with split RNG streams: the per-point transport
+loop (every point samples its own sim_cohort_round per round) against
+``transport="fused"`` (ONE shared-rng ``sim_grid_round`` lockstep pass
+per round for every point's cohort). The parity flag asserts the
+per-scenario-rng contract: ``transport="parity"`` — the same single
+sim_grid_round call driven by per-point streams — reproduces the
+per-point loop's rows bitwise.
+
 Emits a BENCH json line with both wall times, the speedup, plane/coalescing
 telemetry, and EXACT row parity flags (CSV-text equality, nan-aware) for
 fig3, fig4, and table3. Parity failure exits non-zero: the grid engine's
@@ -41,6 +50,135 @@ def _csv_rows(rows):
     """Rows as CSV text cells — exact-parity comparison, nan-aware
     (str(nan) == str(nan), while nan != nan as floats)."""
     return [[str(x) for x in r] for r in rows]
+
+
+def stochastic_fig4_points(fast: bool = False):
+    """The fig4 (loss x tcp) grid with event-granular DES transport on
+    split RNG streams — the configuration whose transport the grid driver
+    can hoist into one sim_grid_round per round."""
+    from benchmarks import fig4_loss
+
+    _, points = fig4_loss.sweep_points(fast)
+    return [dict(kw, stochastic=True, rng_streams="split") for kw in points]
+
+
+def time_transport_plane(
+    tcps, links, up, down, rounds: int, reps: int = 1
+):
+    """Time EXACTLY the work the grid driver hoists: per round, every
+    scenario's stochastic cohort transport — as S per-scenario
+    ``sim_cohort_round`` calls (the per-point transport loop) vs ONE
+    fused shared-rng ``sim_grid_round``. Streams are derived per
+    (scenario/grid, round) the same way the engines derive them, payload
+    bytes are asymmetric per scenario. Returns (loop_s, fused_s)
+    medians over ``reps`` interleaved passes."""
+    from repro.core.server import _TRANSPORT_STREAM, derive_rng
+    from repro.transport import sim_cohort_round, sim_grid_round
+
+    S = len(links)
+    C = len(links[0])
+    ltt = np.full(C, 2.0)
+    conn = np.zeros(C, bool)
+
+    def loop():
+        for r in range(rounds):
+            for s in range(S):
+                sim_cohort_round(
+                    tcps[s], links[s], update_bytes=up[s],
+                    local_train_times=ltt,
+                    rng=derive_rng(s, _TRANSPORT_STREAM, r),
+                    connected=conn, download_bytes=down[s],
+                )
+
+    def fused():
+        for r in range(rounds):
+            sim_grid_round(
+                tcps, links, update_bytes=np.asarray(up, np.int64),
+                download_bytes=np.asarray(down, np.int64),
+                local_train_times=np.broadcast_to(ltt, (S, C)),
+                connected=np.broadcast_to(conn, (S, C)),
+                rng=derive_rng(0, _TRANSPORT_STREAM, r),
+            )
+
+    loop_t, fused_t = [], []
+    for _ in range(max(int(reps), 1)):
+        t0 = time.time()
+        loop()
+        loop_t.append(time.time() - t0)
+        t0 = time.time()
+        fused()
+        fused_t.append(time.time() - t0)
+    return float(np.median(loop_t)), float(np.median(fused_t))
+
+
+def fused_transport_section(
+    pts, grid_label: str, tcps, links, up, down, *, reps: int = 1
+):
+    """Shared fused-transport BENCH sub-dict (sweep_bench and
+    compress_bench emit the same schema).
+
+    Two measurements: ``transport_*`` times the hoisted work in isolation
+    via ``time_transport_plane`` (the speedup target lives here — the
+    fused plane must clearly beat the per-point loop at the grid size);
+    ``sweep_*`` reports the end-to-end stochastic sweep both ways
+    (informational: the shared draw order decorrelates deliveries across
+    same-seed points, which costs provenance coalescing on the training
+    side). The parity flag is the per-scenario-rng contract: one
+    sim_grid_round per round on the points' own derived streams must
+    reproduce the per-point transport loop's rows bitwise."""
+    from benchmarks.common import ROUNDS, run_fl_grid_experiments
+
+    loop_s, fused_plane_s = time_transport_plane(
+        tcps, links, up, down, ROUNDS, reps=reps
+    )
+
+    run_fl_grid_experiments(pts, transport="per_point")  # warmup
+    run_fl_grid_experiments(pts, transport="fused")
+    t0 = time.time()
+    rows_pp = run_fl_grid_experiments(pts, transport="per_point")
+    sweep_pp_s = time.time() - t0
+    t0 = time.time()
+    _, stats = run_fl_grid_experiments(pts, transport="fused", return_stats=True)
+    sweep_fused_s = time.time() - t0
+
+    rows_parity = run_fl_grid_experiments(pts, transport="parity")
+    parity = _csv_rows(
+        [list(r.values()) for r in rows_parity]
+    ) == _csv_rows([list(r.values()) for r in rows_pp])
+
+    return {
+        "grid": grid_label,
+        "points": len(pts),
+        "transport_loop_s": round(loop_s, 3),
+        "transport_fused_s": round(fused_plane_s, 3),
+        "speedup": round(loop_s / fused_plane_s, 3),
+        "target_speedup": 2.0,
+        "meets_target": loop_s / fused_plane_s >= 2.0,
+        "sweep_per_point_s": round(sweep_pp_s, 3),
+        "sweep_fused_s": round(sweep_fused_s, 3),
+        "parity": parity,
+        "transport_dispatches": stats.transport_dispatches,
+        "transport_rows": stats.transport_rows,
+    }
+
+
+def run_fused_transport_bench(*, fast: bool = False, reps: int = 1):
+    """Fused transport plane vs the per-point transport loop on the
+    stochastic fig4 grid (uncompressed: full-model payloads both ways)."""
+    from benchmarks import fig4_loss
+    from benchmarks.common import N_CLIENTS, _shared_task
+
+    _, raw = fig4_loss.sweep_points(fast)
+    up_bytes = _shared_task().update_bytes
+    return fused_transport_section(
+        stochastic_fig4_points(fast),
+        "fig4_loss stochastic (DES, split streams)",
+        [kw["tcp"] for kw in raw],
+        [[kw["link"]] * N_CLIENTS for kw in raw],
+        [up_bytes] * len(raw),
+        [up_bytes] * len(raw),
+        reps=reps,
+    )
 
 
 def run_bench(*, fast: bool = False, reps: int = 1):
@@ -96,7 +234,9 @@ def run_bench(*, fast: bool = False, reps: int = 1):
         "parity_table3": parity_table3,
         "parity": parity_fig3 and parity_fig4 and parity_table3,
         "grid_stats": dataclasses.asdict(grid_stats) if grid_stats else None,
+        "fused_transport": run_fused_transport_bench(fast=fast, reps=reps),
     }
+    result["parity"] = result["parity"] and result["fused_transport"]["parity"]
     print("BENCH " + json.dumps(result))
     return result
 

@@ -53,6 +53,17 @@ from repro.utils import tree_size
 
 @dataclass(frozen=True)
 class Compressor:
+    """One update-compression scheme; see the module docstring for the
+    plane/sequential parity contract.
+
+    Payload-bytes convention: ``wire_bytes(tree)`` is the EXACT upload
+    wire size of one compressed update shaped like ``tree`` — the number
+    every transport engine bills for the client->server direction, while
+    downloads bill the full model (``LocalTask.update_bytes``). The grid
+    driver also stamps it per scenario row into ``sim_grid_round``'s
+    ``update_bytes`` plane, so compression x network interplay is exact
+    per sweep point."""
+
     name: str
     compress: Callable  # (delta, residual) -> (payload, new_residual)
     decompress: Callable  # payload -> delta (same tree structure as input)

@@ -4,7 +4,15 @@ transport/chaos/tuning subpackages supply the network substrate."""
 
 from repro.core.client import EdgeClient, LocalTask, lm_task, mnist_cnn_task
 from repro.core.grid import GridPoint, GridResult, GridStats, run_fl_grid
-from repro.core.server import FederatedServer, FitJob, History, RoundRecord, ServerConfig
+from repro.core.server import (
+    FederatedServer,
+    FitJob,
+    History,
+    PendingRound,
+    RoundRecord,
+    ServerConfig,
+    derive_rng,
+)
 from repro.core.strategy import (
     STRATEGIES,
     Strategy,
@@ -24,6 +32,8 @@ __all__ = [
     "lm_task",
     "FederatedServer",
     "FitJob",
+    "PendingRound",
+    "derive_rng",
     "GridPoint",
     "GridResult",
     "GridStats",

@@ -60,9 +60,17 @@ import numpy as np
 
 from repro.chaos import ChaosSchedule
 from repro.core.client import EdgeClient, LocalTask
-from repro.core.server import FederatedServer, History, ServerConfig
+from repro.core.server import (
+    _GRID_STREAM,
+    FederatedServer,
+    History,
+    PendingRound,
+    ServerConfig,
+    derive_rng,
+)
 from repro.core.strategy import Strategy
 from repro.transport import TcpParams
+from repro.transport.des import sim_grid_round
 
 
 @dataclass
@@ -96,6 +104,8 @@ class GridStats:
     evals_computed: int = 0
     compress_requested: int = 0  # compressed point-rounds
     compress_computed: int = 0  # heavy compress_rows programs actually run
+    transport_dispatches: int = 0  # hoisted sim_grid_round calls (1/round)
+    transport_rows: int = 0  # (point, client) rows sampled through them
 
 
 @dataclass
@@ -132,6 +142,61 @@ def _gather_rows(planes, chunk: int, idxs: List[int]):
     return stacked, n_out, m_out
 
 
+def _plane_transport(
+    waiting: List[Tuple[int, PendingRound]],
+    servers: List[FederatedServer],
+    mode: str,
+    transport_seed: int,
+    rnd: int,
+):
+    """Sample every waiting point's cohort transport as ONE
+    ``sim_grid_round`` call: rows are (point, cohort member) pairs, each
+    row carrying its point's TcpParams, effective link, and asymmetric
+    payload bytes (compressed upload, full-model download). Cohort sizes
+    may differ across points — the plane is ragged-aware.
+
+    ``mode="parity"`` hands each scenario its point's OWN derived
+    per-round transport stream (``FederatedServer._transport_rng``), so
+    outcomes are bitwise identical to each point sampling its transport
+    standalone. ``mode="fused"`` drives the whole plane from one shared
+    stream derived from (transport_seed, round) — one lockstep pass, same
+    mechanisms and distributions, a single shared draw order.
+
+    Returns per-point (success [k], time [k], reconnects [k]) triples in
+    ``waiting`` order, ready for ``finish_transport``."""
+    tcps = [servers[i].tcp for i, _ in waiting]
+    links = [pr.links for _, pr in waiting]
+    up = [np.full(len(pr.cohort), pr.upload_bytes, np.int64) for _, pr in waiting]
+    down = [
+        np.full(len(pr.cohort), pr.download_bytes, np.int64) for _, pr in waiting
+    ]
+    ltt = [pr.local_times for _, pr in waiting]
+    conn = [pr.connected for _, pr in waiting]
+    if mode == "parity":
+        rng_kw = dict(rngs=[servers[i]._transport_rng for i, _ in waiting])
+    else:
+        # _GRID_STREAM, not _TRANSPORT_STREAM: the shared plane stream
+        # must be decorrelated from every point's private transport
+        # stream even when transport_seed equals the points' seeds
+        rng_kw = dict(rng=derive_rng(transport_seed, _GRID_STREAM, rnd))
+    out = sim_grid_round(
+        tcps,
+        links,
+        update_bytes=up,
+        download_bytes=down,
+        local_train_times=ltt,
+        connected=conn,
+        **rng_kw,
+    )
+    res = []
+    for s, (_, pr) in enumerate(waiting):
+        k = len(pr.cohort)
+        res.append(
+            (out.success[s][:k], out.time[s][:k], out.reconnects[s][:k].astype(float))
+        )
+    return res
+
+
 def run_fl_grid(
     task: LocalTask,
     points: Sequence[GridPoint],
@@ -139,6 +204,8 @@ def run_fl_grid(
     eval_data: Optional[Dict[str, np.ndarray]] = None,
     coalesce: bool = True,
     max_plane_rows: int = 64,
+    transport: str = "per_point",
+    transport_seed: int = 0,
 ) -> GridResult:
     """Run every sweep point of a characterization grid in lockstep.
 
@@ -146,7 +213,30 @@ def run_fl_grid(
     seed) to running each point through ``FederatedServer.run`` with
     ``batched=True``. ``max_plane_rows`` caps one dispatch's row count
     (anchor stacking is O(rows x params); 64 rows of the MNIST CNN is
-    ~100 MB of anchors)."""
+    ~100 MB of anchors).
+
+    ``transport`` selects where stochastic transport is sampled:
+
+    - ``"per_point"`` (default): each point samples its own transport
+      inside ``begin_round`` — the historical path, and the only one for
+      analytic-mode or single-stream points.
+    - ``"parity"``: eligible points (``stochastic=True``, ``batched=True``,
+      split RNG streams) defer transport; the driver samples all of them
+      as one ``sim_grid_round(rngs=...)`` call per round, each scenario on
+      its point's own derived stream — bitwise identical to "per_point".
+    - ``"fused"``: same hoist, but the whole (point x client) plane runs
+      one lockstep pass on a single stream derived from
+      ``(transport_seed, round)`` — the throughput mode. Same transport
+      mechanisms and distributions; outcomes are a different (shared)
+      draw order, so per-point results are distribution-equivalent, not
+      draw-for-draw reproductions. Selection streams are unaffected
+      either way (the split-stream contract).
+
+    Ineligible points fall back to "per_point" transparently in both
+    hoisted modes. ``GridStats.transport_dispatches`` counts hoisted
+    ``sim_grid_round`` calls; ``transport_rows`` the rows they sampled."""
+    if transport not in ("per_point", "parity", "fused"):
+        raise ValueError(f"unknown transport mode {transport!r}")
     stats = GridStats()
     nonce = itertools.count()
     interned: Dict[Any, int] = {}
@@ -205,16 +295,45 @@ def run_fl_grid(
     )
     max_rounds = max((p.config.rounds for p in points), default=0)
 
+    hoist = transport in ("parity", "fused")
+
+    def _hoistable(srv: FederatedServer) -> bool:
+        # the hoist reproduces the BATCHED cohort draw discipline, and a
+        # point's selection stream only survives it under the split-rng
+        # contract; everything else keeps sampling inside begin_round
+        return srv.config.stochastic and srv.config.batched and srv.split_streams
+
     for rnd in range(max_rounds):
-        # --- per-point pre phase: selection + transport on the point's own
-        # RNG stream; collect plane work orders ------------------------------
-        pending = []  # (point_idx, FitJob, plans)
+        # --- per-point pre phase: selection on the point's own RNG stream;
+        # transport inline (per_point) or deferred to the shared plane ------
+        jobs = []  # (point_idx, FitJob)
+        waiting = []  # (point_idx, PendingRound) awaiting plane transport
         for i, srv in enumerate(servers):
             if srv.terminated or rnd >= srv.config.rounds:
                 continue
-            job = srv.begin_round(rnd)
-            if job is None:
+            if hoist and _hoistable(srv):
+                pr = srv.select_cohort(rnd)
+                if pr is not None:
+                    waiting.append((i, pr))
                 continue
+            job = srv.begin_round(rnd)
+            if job is not None:
+                jobs.append((i, job))
+
+        # --- transport plane: ONE stochastic sim_grid_round for the round --
+        if waiting:
+            outcomes = _plane_transport(waiting, servers, transport, transport_seed, rnd)
+            stats.transport_dispatches += 1
+            stats.transport_rows += sum(len(pr.cohort) for _, pr in waiting)
+            for (i, pr), (succ, tt, rc) in zip(waiting, outcomes):
+                job = servers[i].finish_transport(pr, succ, tt, rc)
+                if job is not None:
+                    jobs.append((i, job))
+            jobs.sort(key=lambda ij: ij[0])  # point order, deterministic
+
+        pending = []  # (point_idx, FitJob, plans)
+        for i, job in jobs:
+            srv = servers[i]
             if not (plane_ok and srv.config.batched):
                 # no plane path for this point/task: run it standalone
                 stacked, deltas, weights, per_metrics = srv.execute_fit(job)

@@ -20,6 +20,15 @@ network is simulated. The simulated clock therefore reflects transport +
 (modeled) Pi-class compute time, while model quality evolves from the
 actual optimization trajectory — this is what lets the paper's
 accuracy-vs-network figures reproduce organically.
+
+The round is a state machine with externally drivable halves:
+``select_cohort`` (liveness/selection) -> transport (``run_transport``
+locally, or a grid-level plane) -> ``finish_transport`` (deliveries,
+quorum, FitJob) -> ``execute_fit`` -> ``finish_round``. The grid engine
+drives many servers through these halves in lockstep and hoists the
+middle (stochastic transport) and the fit into shared planes; see
+``ServerConfig.rng_streams`` for the stream discipline that keeps this
+hoisting bitwise-safe, and docs/architecture.md for the full contract.
 """
 
 from __future__ import annotations
@@ -51,6 +60,10 @@ class RoundRecord:
     reconnects: float
     metrics: Dict[str, float] = field(default_factory=dict)
     events: List[Any] = field(default_factory=list)
+    # selected client ids in cohort (selection-draw) order — the observable
+    # the split-stream contract is asserted on: at a fixed seed this
+    # sequence must not depend on which transport engine sampled the round
+    selected_ids: List[int] = field(default_factory=list)
 
 
 @dataclass
@@ -96,9 +109,33 @@ class FitJob:
     record: RoundRecord
     clients: List[EdgeClient]  # delivering clients, delivery order
     arrivals: List[float]
-    payload_bytes: int
+    payload_bytes: int  # UPLOAD wire size (compressed; byte accounting)
     steps: int
     prox_mu: float
+
+
+@dataclass
+class PendingRound:
+    """Selected cohort awaiting transport: the output of
+    ``FederatedServer.select_cohort`` and the input its transport phase
+    (``finish_transport``) consumes alongside sampled outcomes.
+
+    This is the seam the grid engine's fused transport plane cuts at: the
+    driver collects PendingRounds across sweep points, samples every
+    point's transport as one ``sim_grid_round`` call, and hands each
+    point's row slice back to ``finish_transport``. Payload bytes are
+    asymmetric — ``upload_bytes`` is the compressor's exact wire size for
+    the current global params, ``download_bytes`` the full model
+    (``LocalTask.update_bytes``)."""
+
+    rnd: int
+    record: RoundRecord
+    cohort: List[EdgeClient]  # selection order
+    links: List[LinkProfile]  # effective link per cohort member
+    local_times: np.ndarray  # [k] wire-idle local-training seconds
+    connected: np.ndarray  # [k] pre-round connection state
+    upload_bytes: int
+    download_bytes: int
 
 
 @dataclass
@@ -134,16 +171,53 @@ class ServerConfig:
     # are distribution-equivalent, not draw-for-draw identical.
     batched: bool = False
     # transport engine selector (stochastic mode only). "default" keeps
-    # sim_cohort_round's draw discipline and bills the compressed payload
-    # in BOTH directions (the historical modeling). "fused_transport"
-    # routes the cohort through sim_grid_round's shared-rng plane
-    # (ROADMAP PR 3 follow-up) with per-row payload bytes: uploads carry
-    # the COMPRESSED wire size, downloads the full model size. For the
-    # single-scenario server the plane is draw-for-draw identical to the
-    # default path — the flag's behavioral delta is the asymmetric
-    # payload modeling, and it is the entry point a grid-level driver
-    # extends to an [S*C]-row plane across sweep points.
+    # sim_cohort_round's draw discipline; "fused_transport" routes the
+    # cohort through sim_grid_round's shared-rng plane (and implies
+    # rng_streams="split"). Both engines now bill ASYMMETRIC payloads —
+    # uploads carry the compressor's exact wire size, downloads the full
+    # model (LocalTask.update_bytes) — so the flag's remaining delta is
+    # the draw order, and it is the entry point the grid driver extends
+    # to an [S*C]-row plane across sweep points (run_fl_grid transport=).
     engine: str = "default"
+    # RNG stream discipline. "single" (the seed-compatible historical
+    # stream): ONE generator drives cohort selection, transport sampling,
+    # and batch plans in interleaved consumption order — bitwise identical
+    # to every release before the begin_round split. "split": two derived,
+    # independently-forkable streams, fold_in-keyed per (seed, stream,
+    # round) — the COHORT stream (selection draws first, then batch plans)
+    # and the TRANSPORT stream. Because both are re-derived each round,
+    # a point's selection sequence is bitwise invariant to which engine
+    # sampled transport (per-point loop, per-scenario parity plane, or the
+    # grid's shared fused plane) and to how many draws transport consumed.
+    # engine="fused_transport" implies "split".
+    rng_streams: str = "single"
+
+    def __post_init__(self):
+        # typos here would silently select the legacy stream discipline
+        # and silently exclude points from the grid's transport hoist
+        if self.engine not in ("default", "fused_transport"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        if self.rng_streams not in ("single", "split"):
+            raise ValueError(f"unknown rng_streams {self.rng_streams!r}")
+
+
+# stream tags for the split-rng discipline (spawn_key components).
+# _GRID_STREAM seeds the grid driver's SHARED fused-transport stream — a
+# distinct tag so it never collides bitwise with any point's private
+# transport stream (points and grids commonly share seed 0).
+_COHORT_STREAM = 1
+_TRANSPORT_STREAM = 2
+_GRID_STREAM = 3
+
+
+def derive_rng(seed: int, stream: int, rnd: int) -> np.random.Generator:
+    """Fold-in-keyed generator: an independent, reproducible stream per
+    (seed, stream tag, round). numpy's SeedSequence spawn keys give the
+    same independence guarantee jax.random.fold_in gives PRNGKeys — equal
+    keys yield bitwise-equal streams, distinct keys decorrelated ones."""
+    return np.random.default_rng(
+        np.random.SeedSequence(entropy=seed, spawn_key=(stream, rnd))
+    )
 
 
 class FederatedServer:
@@ -172,6 +246,9 @@ class FederatedServer:
         # so sweep points sharing a trajectory evaluate once
         self._evaluate = eval_fn or task.evaluate
         self.rng = np.random.default_rng(config.seed)
+        # split-stream discipline: select_cohort re-derives self.rng (the
+        # cohort stream) and this transport stream at each round boundary
+        self._transport_rng = None
         import jax
 
         self.global_params = task.init_fn(jax.random.PRNGKey(config.seed))
@@ -189,33 +266,59 @@ class FederatedServer:
         self._client_slot = {id(c): i for i, c in enumerate(self.clients)}
 
     # ------------------------------------------------------------------
+    @property
+    def split_streams(self) -> bool:
+        """True when selection/plan draws and transport draws come from the
+        two derived per-round streams (see ServerConfig.rng_streams)."""
+        return (
+            self.config.rng_streams == "split"
+            or self.config.engine == "fused_transport"
+        )
+
+    def _round_transport_rng(self) -> np.random.Generator:
+        """The generator transport sampling must consume this round: the
+        derived per-round transport stream under the split discipline, the
+        shared interleaved stream otherwise."""
+        return self._transport_rng if self.split_streams else self.rng
+
+    # ------------------------------------------------------------------
     def _client_transport(
-        self, client: EdgeClient, link: LinkProfile, local_time: float, payload_bytes: int
+        self,
+        client: EdgeClient,
+        link: LinkProfile,
+        local_time: float,
+        upload_bytes: int,
+        download_bytes: int,
     ):
-        """Returns (completed, time, reconnects)."""
+        """Sequential per-client transport. Returns (completed, time,
+        reconnects). Payloads are asymmetric: ``upload_bytes`` is the
+        compressed wire size, ``download_bytes`` the full model."""
+        rng = self._round_transport_rng()
         if self.config.stochastic:
             out = sim_client_round(
                 self.tcp,
                 link,
-                update_bytes=payload_bytes,
+                update_bytes=upload_bytes,
                 local_train_time=local_time,
-                rng=self.rng,
+                rng=rng,
                 connected=client.connected,
+                download_bytes=download_bytes,
             )
             return out.success, out.time, out.reconnects
         out = analytic_round(
             self.tcp,
             link,
-            update_bytes=payload_bytes,
+            update_bytes=upload_bytes,
             local_train_time=local_time,
             connected=client.connected,
+            download_bytes=download_bytes,
         )
-        completed = self.rng.random() < out.p_complete
+        completed = rng.random() < out.p_complete
         t = out.expected_time if math.isfinite(out.expected_time) else self.config.round_deadline
         return completed, t, out.reconnects
 
     # ------------------------------------------------------------------
-    def _cohort_transport(self, cohort: List[EdgeClient], t_now: float, payload_bytes: int):
+    def _cohort_transport(self, pending: PendingRound):
         """Vectorized transport for the whole cohort.
 
         Returns (completed [k] bool, time [k], reconnects [k]). In analytic
@@ -225,55 +328,52 @@ class FederatedServer:
         draw-for-draw at equal seed.
         """
         cfg = self.config
-        links = [
-            c.link_override if c.link_override is not None
-            else self.chaos.link_at(t_now, c.client_id)
-            for c in cohort
-        ]
-        local_times = np.array(
-            [cfg.local_steps * c.step_time(cfg.base_step_cost) for c in cohort]
-        )
+        cohort, links = pending.cohort, pending.links
+        local_times = pending.local_times
+        rng = self._round_transport_rng()
         if cfg.stochastic:
-            connected = np.array([c.connected for c in cohort], bool)
+            connected = pending.connected
             if cfg.engine == "fused_transport":
-                # opt-in shared-rng plane (sim_grid_round fused mode).
-                # At S=1 the plane samples draw-for-draw like the default
-                # path; what changes is the payload modeling — per-row
-                # byte arrays carry the compressed upload size and the
-                # full-model download size separately.
+                # opt-in shared-rng plane (sim_grid_round fused mode): the
+                # S=1 special case of the grid driver's (S, C) transport
+                # plane, draw-for-draw identical to the default path.
                 out = sim_grid_round(
                     self.tcp,
                     [links],
-                    update_bytes=np.full((1, len(cohort)), payload_bytes, np.int64),
+                    update_bytes=np.full(
+                        (1, len(cohort)), pending.upload_bytes, np.int64
+                    ),
                     download_bytes=np.full(
-                        (1, len(cohort)), self.task.update_bytes, np.int64
+                        (1, len(cohort)), pending.download_bytes, np.int64
                     ),
                     local_train_times=local_times[None],
-                    rng=self.rng,
+                    rng=rng,
                     connected=connected[None],
                 )
                 return out.success[0], out.time[0], out.reconnects[0].astype(float)
             out = sim_cohort_round(
                 self.tcp,
                 links,
-                update_bytes=payload_bytes,
+                update_bytes=pending.upload_bytes,
                 local_train_times=local_times,
-                rng=self.rng,
+                rng=rng,
                 connected=connected,
+                download_bytes=pending.download_bytes,
             )
             return out.success, out.time, out.reconnects.astype(float)
         outs = [
             analytic_round(
                 self.tcp,
                 link,
-                update_bytes=payload_bytes,
+                update_bytes=pending.upload_bytes,
                 local_train_time=lt,
                 connected=c.connected,
+                download_bytes=pending.download_bytes,
             )
             for c, link, lt in zip(cohort, links, local_times)
         ]
         p = np.array([o.p_complete for o in outs])
-        completed = self.rng.random(len(cohort)) < p
+        completed = rng.random(len(cohort)) < p
         times = np.array(
             [
                 o.expected_time if math.isfinite(o.expected_time) else cfg.round_deadline
@@ -292,11 +392,22 @@ class FederatedServer:
         if self.consecutive_failures >= self.config.max_consecutive_failures:
             self.terminated = True
 
-    def begin_round(self, rnd: int) -> Optional[FitJob]:
-        """Liveness, cohort selection, transport, quorum. Returns a FitJob
-        when local training should run, or None for a failed round (already
-        recorded; ``terminated`` is set when the failure budget is spent)."""
+    def select_cohort(self, rnd: int) -> Optional[PendingRound]:
+        """Pre-transport half of ``begin_round``: liveness, cohort
+        selection, and the round's effective links/payloads. Returns a
+        PendingRound for the transport phase, or None when the round
+        already failed for lack of live clients (recorded; ``terminated``
+        is set when the failure budget is spent).
+
+        Under the split-stream discipline this is also the round boundary
+        for RNG state: the cohort stream (selection draws first, batch-plan
+        draws after) and the transport stream are both re-derived here,
+        fold_in-keyed on (seed, stream, round) — which is what makes the
+        selection sequence bitwise invariant to the transport engine."""
         cfg = self.config
+        if self.split_streams:
+            self.rng = derive_rng(cfg.seed, _COHORT_STREAM, rnd)
+            self._transport_rng = derive_rng(cfg.seed, _TRANSPORT_STREAM, rnd)
         t = self.sim_time
         live = [c for c in self.clients if self.chaos.alive(t, c.client_id)]
         n_total = len(self.clients)
@@ -314,27 +425,63 @@ class FederatedServer:
         idx = self.rng.choice(len(live), size=k, replace=False)
         cohort = [live[i] for i in idx]
         record.selected = k
+        record.selected_ids = [c.client_id for c in cohort]
 
+        links = [
+            c.link_override if c.link_override is not None
+            else self.chaos.link_at(t, c.client_id)
+            for c in cohort
+        ]
+        local_times = np.array(
+            [cfg.local_steps * c.step_time(cfg.base_step_cost) for c in cohort]
+        )
+        return PendingRound(
+            rnd=rnd,
+            record=record,
+            cohort=cohort,
+            links=links,
+            local_times=local_times,
+            connected=np.array([c.connected for c in cohort], bool),
+            upload_bytes=self.compressor.wire_bytes(self.global_params),
+            download_bytes=self.task.update_bytes,
+        )
+
+    def run_transport(self, pending: PendingRound):
+        """Sample the pending round's transport on this server's own
+        streams: the batched cohort draw discipline or the sequential
+        per-client loop. Returns (completed [k], times [k], reconnects
+        [k]) — the triple ``finish_transport`` consumes, and the same
+        shape the grid driver's shared plane produces per point."""
+        if self.config.batched:
+            return self._cohort_transport(pending)
+        comp, times, recon = [], [], []
+        for client, link, lt in zip(pending.cohort, pending.links, pending.local_times):
+            done, ct, rc = self._client_transport(
+                client, link, float(lt), pending.upload_bytes, pending.download_bytes
+            )
+            comp.append(done)
+            times.append(ct)
+            recon.append(rc)
+        return np.array(comp, bool), np.array(times, float), np.array(recon, float)
+
+    def finish_transport(
+        self, pending: PendingRound, completed, times, reconnects
+    ) -> Optional[FitJob]:
+        """Post-transport half of ``begin_round``: apply sampled outcomes
+        — connection state, deliveries under the deadline, straggler
+        close, quorum — and emit the round's FitJob (or record a failed
+        round and return None). ``completed``/``times``/``reconnects`` are
+        [k] arrays in cohort order, from ``run_transport`` or from one
+        point's row slice of the grid driver's fused transport plane."""
+        cfg = self.config
+        record = pending.record
+        quorum = self.strategy.quorum(len(self.clients))
+        record.reconnects += float(np.sum(np.asarray(reconnects, float)))
         deliveries = []
-        payload_bytes = self.compressor.wire_bytes(self.global_params)
-        if cfg.batched:
-            completed, ctimes, recon = self._cohort_transport(cohort, t, payload_bytes)
-            record.reconnects += float(np.sum(recon))
-            for client, done, ct in zip(cohort, completed, ctimes):
-                client.connected = bool(done)  # failed exchange leaves conn dead
-                if done and ct <= cfg.round_deadline:
-                    deliveries.append((client, float(ct)))
-        else:
-            for client in cohort:
-                link = self.chaos.link_at(t, client.client_id)
-                if client.link_override is not None:
-                    link = client.link_override
-                local_time = cfg.local_steps * client.step_time(cfg.base_step_cost)
-                done, ct, rc = self._client_transport(client, link, local_time, payload_bytes)
-                record.reconnects += rc
-                client.connected = done  # failed exchange leaves conn dead
-                if done and ct <= cfg.round_deadline:
-                    deliveries.append((client, ct))
+        for client, done, ct in zip(pending.cohort, completed, times):
+            client.connected = bool(done)  # failed exchange leaves conn dead
+            if done and ct <= cfg.round_deadline:
+                deliveries.append((client, float(ct)))
 
         # straggler mitigation: close the round once the fastest
         # quorum_close_fraction of the over-provisioned cohort arrived
@@ -349,19 +496,39 @@ class FederatedServer:
             return None
         self.consecutive_failures = 0
         return FitJob(
-            rnd=rnd,
+            rnd=pending.rnd,
             record=record,
             clients=[client for client, _ in deliveries],
             arrivals=[ct for _, ct in deliveries],
-            payload_bytes=payload_bytes,
+            payload_bytes=pending.upload_bytes,
             steps=cfg.local_steps,
             prox_mu=self.strategy.prox_mu,
         )
 
+    def begin_round(self, rnd: int) -> Optional[FitJob]:
+        """Liveness, cohort selection, transport, quorum. Returns a FitJob
+        when local training should run, or None for a failed round (already
+        recorded; ``terminated`` is set when the failure budget is spent).
+
+        Composed of ``select_cohort`` -> ``run_transport`` ->
+        ``finish_transport``; callers that sample transport elsewhere (the
+        grid engine's fused (S, C) plane) call the outer halves directly
+        and skip ``run_transport``."""
+        pending = self.select_cohort(rnd)
+        if pending is None:
+            return None
+        completed, times, reconnects = self.run_transport(pending)
+        return self.finish_transport(pending, completed, times, reconnects)
+
     def execute_fit(self, job: FitJob):
         """Per-point local training for one FitJob: one plane dispatch for
         the cohort (batched) or the sequential per-client loop. Returns
-        (stacked [C,...] or None, deltas list, weights, per_metrics)."""
+        (stacked [C,...] or None, deltas list, weights, per_metrics).
+
+        Batch plans draw from ``self.rng`` — the cohort stream. Under the
+        split discipline that stream was re-derived at this round's
+        ``select_cohort`` (selection draws came first), so plan draws can
+        never perturb a later round's selection."""
         cfg = self.config
         stacked = None  # stacked deltas [C, ...] when the batched fit ran
         deltas: List[Any] = []
@@ -405,7 +572,14 @@ class FederatedServer:
         ``precompressed=True`` means the caller (the grid engine) already
         ran plane compression — possibly shared across sweep points with
         equal compression provenance — and ``stacked`` holds decompressed
-        deltas with this server's residual plane already advanced."""
+        deltas with this server's residual plane already advanced.
+
+        Byte accounting follows the asymmetric payload convention:
+        ``job.payload_bytes`` (credited to ``client.bytes_sent``) is the
+        compressed UPLOAD wire size; the full-model download was already
+        billed by the transport phase via ``PendingRound.download_bytes``.
+        Consumes no RNG: everything stochastic about a round happens in
+        ``begin_round``/``execute_fit``."""
         cfg = self.config
         rnd = job.rnd
         record = job.record

@@ -275,13 +275,18 @@ class CohortOutcome:
 
 @dataclass
 class GridOutcome:
-    """Per-(scenario, client) arrays for one grid round (all shape [S, C])."""
+    """Per-(scenario, client) arrays for one grid round (all shape [S, C]).
+
+    For ragged grids (scenarios with unequal cohort sizes) C is the widest
+    cohort; padding cells hold zeros/False and ``mask`` marks the real
+    rows. ``mask`` is None for rectangular grids (every cell real)."""
 
     success: np.ndarray
     time: np.ndarray
     reconnects: np.ndarray
     bytes_acked: np.ndarray
     trace: Optional[Dict[str, np.ndarray]] = None
+    mask: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -636,10 +641,13 @@ def sim_cohort_round(
     Vector twin of ``sim_client_round``: every stage sampled for all
     clients at once. ``connected`` and ``local_train_times`` are
     [C]-shaped. ``update_bytes``/``download_bytes`` are scalars or [C]
-    arrays — per-row payload sizes (e.g. compressed wire bytes) flow into
-    the per-row transfer mechanics. With ``trace=True`` the outcome
-    carries sparse per-client event counts (see _TRACE_FIELDS) instead of
-    an ordered event list.
+    arrays — per-row payload sizes that flow into the per-row transfer
+    mechanics. The billing convention is ASYMMETRIC: ``update_bytes``
+    carries the (possibly compressed) upload wire size, ``download_bytes``
+    the full-model download; omitting ``download_bytes`` falls back to
+    symmetric billing. With ``trace=True`` the outcome carries sparse
+    per-client event counts (see _TRACE_FIELDS) instead of an ordered
+    event list.
     """
     download_bytes = update_bytes if download_bytes is None else download_bytes
     k = len(links)
@@ -653,6 +661,83 @@ def sim_cohort_round(
         connected=np.asarray(connected, bool),
     )
     return CohortOutcome(alive, t, reconnects, bytes_acked, counts if trace else None)
+
+
+def _per_scenario_rows(x, sizes, dtype):
+    """Normalize a scalar / length-S sequence (of scalars or [C_s] arrays)
+    into a list of per-scenario [C_s] arrays for the ragged grid path."""
+    if np.isscalar(x) or (isinstance(x, np.ndarray) and x.ndim == 0):
+        return [np.full(c, x, dtype) for c in sizes]
+    out = []
+    for s, c in enumerate(sizes):
+        xs = np.asarray(x[s], dtype)
+        out.append(np.full(c, xs, dtype) if xs.ndim == 0 else xs.reshape(c))
+    return out
+
+
+def _sim_grid_round_ragged(
+    tcp_list, links, up_s, down_s, ltt_s, conn_s, rng, rngs, trace
+) -> GridOutcome:
+    """Ragged grid round: scenarios keep their true cohort widths. Parity
+    mode loops scenarios on their own generators (exact widths, exact
+    draws); fused mode concatenates every real row into one flat plane —
+    no padding rows ever consume shared-stream draws. Outputs are padded
+    to the widest cohort with ``mask`` marking real cells."""
+    S = len(links)
+    sizes = [len(row) for row in links]
+    C = max(sizes) if S else 0
+    success = np.zeros((S, C), bool)
+    time_ = np.zeros((S, C), float)
+    recon = np.zeros((S, C), np.int64)
+    acked = np.zeros((S, C), np.int64)
+    counts = {f: np.zeros((S, C), np.int64) for f in _TRACE_FIELDS} if trace else None
+    mask = np.zeros((S, C), bool)
+    for s, c in enumerate(sizes):
+        mask[s, :c] = True
+
+    if rngs is not None:
+        for s in range(S):
+            o = sim_cohort_round(
+                tcp_list[s],
+                links[s],
+                update_bytes=up_s[s],
+                local_train_times=ltt_s[s],
+                rng=rngs[s],
+                connected=conn_s[s],
+                download_bytes=down_s[s],
+                trace=trace,
+            )
+            c = sizes[s]
+            success[s, :c] = o.success
+            time_[s, :c] = o.time
+            recon[s, :c] = o.reconnects
+            acked[s, :c] = o.bytes_acked
+            if trace:
+                for f in _TRACE_FIELDS:
+                    counts[f][s, :c] = o.trace[f]
+    else:
+        scen = np.repeat(np.arange(S), sizes)
+        ta = _TcpArrays.from_params(tcp_list).take(scen)
+        la = _LinkArrays.from_links([l for row in links for l in row])
+        alive, t, rc, ba, cnt = _sim_rows(
+            ta,
+            la,
+            up_bytes=np.concatenate(up_s) if S else np.zeros(0, np.int64),
+            down_bytes=np.concatenate(down_s) if S else np.zeros(0, np.int64),
+            local_train_times=np.concatenate(ltt_s) if S else np.zeros(0),
+            rng=rng,
+            connected=np.concatenate(conn_s) if S else np.zeros(0, bool),
+        )
+        # boolean scatter is row-major: rows land scenario by scenario in
+        # exactly the concatenation order
+        success[mask] = alive
+        time_[mask] = t
+        recon[mask] = rc
+        acked[mask] = ba
+        if trace:
+            for f in _TRACE_FIELDS:
+                counts[f][mask] = cnt[f]
+    return GridOutcome(success, time_, recon, acked, counts, mask)
 
 
 def sim_grid_round(
@@ -670,6 +755,10 @@ def sim_grid_round(
     """One FL round for a whole characterization grid: S scenarios x C
     clients, each scenario with its own TcpParams and per-client links.
 
+    This is the grid engine's per-round transport plane: ``run_fl_grid``
+    (transport="parity"/"fused") issues exactly one call per sweep round
+    covering every point's cohort.
+
     Two sampling modes:
 
     - ``rngs=[gen_0..gen_{S-1}]`` (parity mode): each scenario's draws come
@@ -683,13 +772,43 @@ def sim_grid_round(
 
     ``tcps`` is one TcpParams or a length-S sequence; ``links`` is [S][C];
     ``update_bytes``/``download_bytes`` are scalars, length-S, or [S, C]
-    (per-row payload sizes — compressed wire bytes differ per scenario
-    point, and the per-row transfer arrays carry them);
+    (per-row payload sizes; the convention is ASYMMETRIC billing —
+    ``update_bytes`` carries the compressed upload wire size,
+    ``download_bytes`` the full-model download; ``download_bytes=None``
+    falls back to symmetric billing);
     ``local_train_times``/``connected`` are [S, C]. All outputs are [S, C].
+
+    Scenarios may have UNEQUAL cohort sizes (``links`` ragged): pass the
+    per-row arguments as length-S sequences of per-scenario scalars or
+    [C_s] arrays. Outputs are then padded to the widest cohort and
+    ``GridOutcome.mask`` marks real cells; fused mode concatenates real
+    rows only, so padding never consumes shared-stream draws.
     """
     S = len(links)
-    C = len(links[0]) if S else 0
     tcp_list = [tcps] * S if isinstance(tcps, TcpParams) else list(tcps)
+    if (rng is None) == (rngs is None):
+        raise ValueError("pass exactly one of rng= (fused) or rngs= (per-scenario)")
+
+    sizes = [len(row) for row in links]
+    if S and any(c != sizes[0] for c in sizes):
+        up_s = _per_scenario_rows(update_bytes, sizes, np.int64)
+        down_s = (
+            up_s
+            if download_bytes is None
+            else _per_scenario_rows(download_bytes, sizes, np.int64)
+        )
+        return _sim_grid_round_ragged(
+            tcp_list,
+            links,
+            up_s,
+            down_s,
+            _per_scenario_rows(local_train_times, sizes, float),
+            _per_scenario_rows(connected, sizes, bool),
+            rng,
+            rngs,
+            trace,
+        )
+    C = sizes[0] if S else 0
 
     def _bytes_grid(b):
         b = np.asarray(b, np.int64)
@@ -701,9 +820,6 @@ def sim_grid_round(
     down = up if download_bytes is None else _bytes_grid(download_bytes)
     local_train_times = np.asarray(local_train_times, float).reshape(S, C)
     connected = np.asarray(connected, bool).reshape(S, C)
-
-    if (rng is None) == (rngs is None):
-        raise ValueError("pass exactly one of rng= (fused) or rngs= (per-scenario)")
 
     if rngs is not None:
         outs = [

@@ -30,7 +30,8 @@ EVAL = synthetic_mnist(300, seed=77)
 
 def _point(
     *, tcp=DEFAULT, link=LAB, chaos=None, strategy=None, min_fit=0.5, rounds=3,
-    seed=0, local_steps=2, stochastic=False, batched=True,
+    seed=0, local_steps=2, stochastic=False, batched=True, rng_streams="single",
+    engine="default",
 ):
     clients = [EdgeClient(i, dataset=s) for i, s in enumerate(SHARDS)]
     return GridPoint(
@@ -40,7 +41,7 @@ def _point(
         chaos or ChaosSchedule(link),
         ServerConfig(
             rounds=rounds, local_steps=local_steps, seed=seed, batched=batched,
-            stochastic=stochastic,
+            stochastic=stochastic, rng_streams=rng_streams, engine=engine,
         ),
     )
 
@@ -318,3 +319,159 @@ def test_trace_disabled_by_default():
 def test_strategy_fingerprints_distinguish_factories():
     assert fedavg().agg_fingerprint == fedavg(min_fit=0.1).agg_fingerprint
     assert trimmed_mean(0.1).agg_fingerprint != trimmed_mean(0.2).agg_fingerprint
+
+
+# ---------------------------------------------------------------------------
+# RNG stream split + fused grid transport plane
+# ---------------------------------------------------------------------------
+
+# Selection draws of the PRE-SPLIT engine at seed 0 (captured before the
+# begin_round split landed): 6 clients, fedavg(min_fit=0.5), DEFAULT/LAB,
+# rounds=3, local_steps=2, batched=True. The single-stream ("legacy")
+# discipline interleaves selection, transport, and plan draws on one
+# generator, so the stochastic rounds 1-2 differ from analytic — exactly
+# the coupling rng_streams="split" removes. This regression pins the
+# default path to the historical stream bit for bit.
+_PRE_SPLIT_SELECTION = {
+    False: [[2, 1, 3, 4, 5, 0], [3, 4, 2, 5, 0, 1], [2, 3, 4, 1, 5, 0]],
+    True: [[2, 1, 3, 4, 5, 0], [0, 3, 4, 1, 2, 5], [0, 2, 4, 3, 5, 1]],
+}
+
+
+def _selected_ids(history):
+    return [r.selected_ids for r in history.rounds]
+
+
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_selection_stream_regression_vs_pre_split_engine(stochastic):
+    """The default single-stream engine still consumes the seed's RNG
+    stream exactly as every release before the begin_round split."""
+    hist = _run_per_point(_point(stochastic=stochastic))
+    assert _selected_ids(hist) == _PRE_SPLIT_SELECTION[stochastic]
+
+
+def test_split_streams_selection_invariant_across_transport_engines():
+    """rng_streams="split": the per-round derived cohort stream makes the
+    selection sequence bitwise identical no matter which engine samples
+    transport — per-point default, per-point fused_transport (S=1 plane),
+    grid parity plane, or the grid's shared-rng fused plane."""
+    base = dict(stochastic=True, rng_streams="split", link=LAB.replace(loss=0.05))
+    ref = _selected_ids(_run_per_point(_point(**base)))
+    assert ref  # non-degenerate: rounds actually ran
+
+    alt = _selected_ids(_run_per_point(_point(**base, engine="fused_transport")))
+    assert alt == ref
+
+    for mode in ("parity", "fused"):
+        res = run_fl_grid(
+            TASK, [_point(**base)], eval_data=EVAL, transport=mode
+        )
+        assert _selected_ids(res.histories[0]) == ref, mode
+
+
+def test_fused_grid_parity_mode_matches_per_point():
+    """transport="parity": ONE sim_grid_round per round covering every
+    point's cohort, each scenario on its point's own derived stream —
+    bitwise identical History to standalone per-point runs (the
+    per-scenario-rng contract), including through ragged chaos cohorts."""
+    kwargs = [
+        dict(stochastic=True, rng_streams="split"),
+        dict(stochastic=True, rng_streams="split", link=LAB.replace(loss=0.05)),
+        dict(stochastic=True, rng_streams="split", tcp=TUNED_EDGE,
+             link=LAB.replace(delay=0.5)),
+        dict(stochastic=True, rng_streams="split", min_fit=0.1,
+             chaos=ChaosSchedule(LAB).add(client_failure_schedule(6, 0.4, seed=7))),
+    ]
+    res = run_fl_grid(
+        TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL, transport="parity"
+    )
+    assert res.stats.transport_dispatches == 3  # one hoisted call per round
+    assert res.stats.transport_rows > 0
+    for kw, hist in zip(kwargs, res.histories):
+        ref = _run_per_point(_point(**kw)).summary()
+        assert _summaries_exactly_equal(ref, hist.summary()), kw
+
+
+def test_fused_grid_shared_stream_deterministic():
+    """transport="fused": the shared-rng plane is deterministic run to run
+    and counts its dispatches; per-point outcomes are a different draw
+    order (distribution-equivalent), so no bitwise claim is made there."""
+    kwargs = [
+        dict(stochastic=True, rng_streams="split"),
+        dict(stochastic=True, rng_streams="split", link=LAB.replace(loss=0.1)),
+    ]
+    a = run_fl_grid(
+        TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL, transport="fused"
+    )
+    b = run_fl_grid(
+        TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL, transport="fused"
+    )
+    assert a.stats.transport_dispatches == 3
+    for ha, hb in zip(a.histories, b.histories):
+        assert _summaries_exactly_equal(ha.summary(), hb.summary())
+
+
+def test_per_point_transport_mode_ignores_hoist_ineligible_points():
+    """Analytic and single-stream points fall back to per-point transport
+    transparently inside a hoisted grid — results stay exact."""
+    kwargs = [
+        dict(),  # analytic, single-stream: never hoisted
+        dict(stochastic=True),  # stochastic but single-stream: not hoisted
+        dict(stochastic=True, rng_streams="split"),  # hoisted
+    ]
+    res = run_fl_grid(
+        TASK, [_point(**kw) for kw in kwargs], eval_data=EVAL, transport="fused"
+    )
+    for kw, hist in zip(kwargs[:2], res.histories[:2]):
+        ref = _run_per_point(_point(**kw)).summary()
+        assert _summaries_exactly_equal(ref, hist.summary()), kw
+
+
+def test_sim_grid_round_ragged_parity_and_mask():
+    """Ragged grids (unequal cohort widths): parity mode reproduces
+    per-scenario sim_cohort_round calls bit for bit at each scenario's
+    true width; the fused mode samples only real rows and marks them."""
+    links = [
+        [LAB, LAB.replace(loss=0.05)],
+        [LAB.replace(delay=0.3)] * 4,
+        [LAB],
+    ]
+    sizes = [2, 4, 1]
+    ltt = [np.full(c, 5.0) for c in sizes]
+    conn = [np.zeros(c, bool) for c in sizes]
+    up = [np.full(c, 100_000, np.int64) for c in sizes]
+    down = [np.full(c, 400_000, np.int64) for c in sizes]
+    out = sim_grid_round(
+        [DEFAULT, TUNED_EDGE, DEFAULT], links, update_bytes=up,
+        download_bytes=down, local_train_times=ltt, connected=conn,
+        rngs=[np.random.default_rng(s) for s in range(3)],
+    )
+    assert out.mask.tolist() == [
+        [True, True, False, False],
+        [True, True, True, True],
+        [True, False, False, False],
+    ]
+    for s, tcp in enumerate((DEFAULT, TUNED_EDGE, DEFAULT)):
+        ref = sim_cohort_round(
+            tcp, links[s], update_bytes=up[s], local_train_times=ltt[s],
+            rng=np.random.default_rng(s), connected=conn[s],
+            download_bytes=down[s],
+        )
+        c = sizes[s]
+        assert np.array_equal(out.success[s][:c], ref.success)
+        assert np.allclose(out.time[s][:c], ref.time)
+        assert not out.success[s][c:].any() and not out.time[s][c:].any()
+
+    fused = sim_grid_round(
+        [DEFAULT, TUNED_EDGE, DEFAULT], links, update_bytes=up,
+        download_bytes=down, local_train_times=ltt, connected=conn,
+        rng=np.random.default_rng(0),
+    )
+    assert np.array_equal(fused.mask, out.mask)
+    assert not fused.time[~fused.mask].any()  # padding never sampled
+    fused2 = sim_grid_round(
+        [DEFAULT, TUNED_EDGE, DEFAULT], links, update_bytes=up,
+        download_bytes=down, local_train_times=ltt, connected=conn,
+        rng=np.random.default_rng(0),
+    )
+    assert np.allclose(fused.time, fused2.time)

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Markdown link check for the docs subsystem (CI docs job).
+
+Scans README.md, ROADMAP.md, and docs/*.md for inline markdown links
+and verifies every RELATIVE target resolves: the file exists, and when
+the link carries a ``#fragment`` the target file contains a heading
+whose GitHub-style slug matches. External links (http/https/mailto) are
+ignored — CI must stay hermetic. Exits non-zero listing every broken
+link.
+
+Usage: ``python tools/check_md_links.py [files...]`` (defaults to the
+doc set above, resolved from the repo root).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_FILES = ["README.md", "ROADMAP.md"]
+
+# [text](target) — but not images' source rendering concerns; images use
+# the same resolution rules. Nested brackets in text are rare enough to
+# ignore; code spans are stripped first.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+FENCE_RE = re.compile(r"^(```|~~~)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation (keep
+    hyphens/underscores), spaces to hyphens."""
+    text = CODE_SPAN_RE.sub(lambda m: m.group(0).strip("`"), heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: Path) -> set:
+    slugs: set = set()
+    counts: dict = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            s = slugify(m.group(1))
+            n = counts.get(s, 0)
+            counts[s] = n + 1
+            slugs.add(s if n == 0 else f"{s}-{n}")
+    return slugs
+
+
+def iter_links(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(
+        path.read_text(encoding="utf-8").splitlines(), 1
+    ):
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(CODE_SPAN_RE.sub("", line)):
+            yield lineno, m.group(1)
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    for lineno, target in iter_links(path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = (path.parent / base).resolve() if base else path
+        if not dest.exists():
+            errors.append(f"{path}:{lineno}: broken link target {target!r}")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in heading_slugs(dest):
+                errors.append(
+                    f"{path}:{lineno}: missing anchor #{frag} in {dest.name}"
+                )
+    return errors
+
+
+def main(argv) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = [ROOT / f for f in DEFAULT_FILES]
+        files += sorted((ROOT / "docs").glob("*.md"))
+    missing = [f for f in files if not f.exists()]
+    errors = [f"missing file: {f}" for f in missing]
+    for f in files:
+        if f.exists():
+            errors += check_file(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(
+        f"check_md_links: {len(files)} files, "
+        f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
