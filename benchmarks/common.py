@@ -24,6 +24,8 @@ import math
 import sys
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.chaos import ChaosSchedule
 from repro.core import (
     EdgeClient,
@@ -97,6 +99,20 @@ def _shared_compressor(spec):
     return _COMPRESSORS[spec]
 
 
+def spawn_point_seeds(n: int, *, root: int = 0) -> List[int]:
+    """``n`` statistically independent per-point seeds from one root, via
+    ``np.random.SeedSequence`` spawning.
+
+    Stochastic sweep grids used to run every point at the literal seed 0,
+    so per-point transport sampled IDENTICAL streams at every sweep point
+    — artificial cross-point stream sharing that the fused plane (one
+    shared draw order) does not have. Spawned seeds make the per-point
+    and fused end-to-end comparisons symmetric: every point gets its own
+    decorrelated stream family either way. Deterministic in (n, root)."""
+    return [int(ss.generate_state(1)[0]) for ss in
+            np.random.SeedSequence(root).spawn(n)]
+
+
 def _make_point(
     *,
     tcp: TcpParams = DEFAULT,
@@ -105,14 +121,20 @@ def _make_point(
     min_fit: float = 0.5,
     rounds: int = ROUNDS,
     seed: int = 0,
+    data_seed: Optional[int] = None,
     local_steps: int = LOCAL_STEPS,
     batched: bool = True,
     compressor=None,
     stochastic: bool = False,
     rng_streams: str = "single",
     engine: str = "default",
+    transport_backend: str = "host",
 ) -> GridPoint:
-    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(_shared_shards(seed))]
+    # data_seed decouples shard contents from the RNG-stream seed: grids
+    # with spawned per-point seeds keep ONE shared shard set (dataset
+    # identity is what the grid engine coalesces training rows on)
+    shards = _shared_shards(seed if data_seed is None else data_seed)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
     return GridPoint(
         clients=clients,
         strategy=fedavg(min_fit=min_fit),
@@ -121,6 +143,7 @@ def _make_point(
         config=ServerConfig(
             rounds=rounds, local_steps=local_steps, seed=seed, batched=batched,
             stochastic=stochastic, rng_streams=rng_streams, engine=engine,
+            transport_backend=transport_backend,
         ),
         compressor=_shared_compressor(compressor),
     )

@@ -104,9 +104,17 @@ def _csv_rows(rows):
 def stochastic_points(fast: bool = False):
     """The compressed (loss x tcp x compressor) grid with event-granular
     DES transport on split streams: every plane row carries its point's
-    compressed upload wire size and full-model download bytes."""
+    compressed upload wire size and full-model download bytes. Per-point
+    stream seeds come from a SeedSequence spawn (shared shards via
+    data_seed) so points don't share one literal stream family."""
+    from benchmarks.common import spawn_point_seeds
+
     _, points = sweep_points(fast)
-    return [dict(kw, stochastic=True, rng_streams="split") for kw in points]
+    seeds = spawn_point_seeds(len(points))
+    return [
+        dict(kw, stochastic=True, rng_streams="split", seed=s, data_seed=0)
+        for kw, s in zip(points, seeds)
+    ]
 
 
 def run_fused_transport_bench(*, fast: bool = False, reps: int = 1):

@@ -36,6 +36,7 @@ def main() -> None:
         round_engine_bench,
         sweep_bench,
         table3_boundaries,
+        transport_plane_bench,
         tuned_vs_default,
     )
 
@@ -52,14 +53,20 @@ def main() -> None:
         ("round_engine_bench", round_engine_bench.main),
         ("sweep_bench", sweep_bench.main),
         ("compress_bench", compress_bench.main),
+        ("transport_plane_bench", transport_plane_bench.main),
     ]
 
     if only is not None:
-        unknown = only - {name for name, _ in benches}
+        valid = [name for name, _ in benches]
+        unknown = only - set(valid)
         if unknown:
             # a typo here would silently skip a bench (and its parity
             # gate) while CI stays green
-            print(f"unknown benchmark(s): {sorted(unknown)}", file=sys.stderr)
+            print(
+                f"unknown benchmark(s): {sorted(unknown)}; "
+                f"valid names: {', '.join(valid)}",
+                file=sys.stderr,
+            )
             sys.exit(2)
 
     summary = []

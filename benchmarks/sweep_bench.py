@@ -55,11 +55,18 @@ def _csv_rows(rows):
 def stochastic_fig4_points(fast: bool = False):
     """The fig4 (loss x tcp) grid with event-granular DES transport on
     split RNG streams — the configuration whose transport the grid driver
-    can hoist into one sim_grid_round per round."""
+    can hoist into one sim_grid_round per round. Every point gets its own
+    SeedSequence-spawned stream seed (shared data shards via data_seed)
+    so per-point transport streams are decorrelated across the grid."""
     from benchmarks import fig4_loss
+    from benchmarks.common import spawn_point_seeds
 
     _, points = fig4_loss.sweep_points(fast)
-    return [dict(kw, stochastic=True, rng_streams="split") for kw in points]
+    seeds = spawn_point_seeds(len(points))
+    return [
+        dict(kw, stochastic=True, rng_streams="split", seed=s, data_seed=0)
+        for kw, s in zip(points, seeds)
+    ]
 
 
 def time_transport_plane(

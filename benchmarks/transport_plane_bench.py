@@ -1,0 +1,324 @@
+"""Device transport plane benchmark: host-numpy loops vs one XLA dispatch.
+
+Times EXACTLY the per-round transport work on a fig4-faithful stochastic
+grid — the paper's loss ladder (0..0.6 step 0.05) x {DEFAULT, BIG_BUFFER},
+LAB delays, 300 KB payloads — at three plane sizes (S*C ~ 64, 512, 4096
+rows), three ways:
+
+- ``host_loop_s``:  S per-scenario ``sim_cohort_round`` calls per round
+  (the per-point transport loop — the host-numpy baseline);
+- ``host_fused_s``: one vectorized numpy ``sim_grid_round`` per round;
+- ``device_s``:     one jitted ``sim_grid_round_device`` dispatch per
+  round (``lax.while_loop`` flow simulation, counter-based streams).
+
+The ≥3x acceptance gate applies at the LARGEST size against the host
+loop; the speedup over the fused numpy plane is reported alongside.
+
+Two parity gates run in the same invocation (failure exits non-zero):
+
+- ``parity_exact``: on the degenerate loss=0 / jitter=0 grid every draw
+  is unused, so the device plane must reproduce the host oracle exactly —
+  success and reconnects bitwise, clocks to float32 tolerance.
+- ``parity_distributional``: on the stochastic grid host and device
+  sample DIFFERENT streams by design (see ``repro/transport/plane.py``),
+  so agreement is statistical: per-scenario delivery rates within a
+  4-sigma binomial envelope of the pooled estimate, and median delivered
+  clocks within 20% on scenarios where both sides mostly deliver.
+
+An end-to-end section sweeps a thinned stochastic fig4 grid through
+``run_fl_grid`` with ``transport="fused"`` on both backends and reports
+wall times plus the device-dispatch telemetry.
+
+Methodology: per size, the round program runs once untimed (jit
+compilation + numpy warmup), then ``--reps`` interleaved passes of
+``ROUNDS`` rounds each; medians are reported (the CI box has bursty
+background load). Device results are materialized with ``np.asarray``
+inside the timed region — dispatch AND compute are billed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/transport_plane_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+ROUNDS = 4
+UPDATE_BYTES = 300_000
+TRAIN_TIME = 30.0
+SIZES = (64, 512, 4096)  # target S*C row counts (actual: S * (target // S))
+GATE_SPEEDUP = 3.0
+
+
+def _grid(target_rows: int):
+    """The fig4-faithful scenario list at ~``target_rows`` total rows:
+    losses 0..0.6 step 0.05 x {DEFAULT, BIG_BUFFER} (S=26 scenarios),
+    cohort width C = target_rows // S. Heavy loss cells are where the
+    host pays python-level per-flow RTO loops — the honest baseline."""
+    from repro.transport import BIG_BUFFER, DEFAULT, LAB
+
+    losses = [round(0.05 * i, 2) for i in range(13)]
+    tcps, links = [], []
+    for tcp in (DEFAULT, BIG_BUFFER):
+        for loss in losses:
+            tcps.append(tcp)
+            links.append(LAB.replace(loss=loss))
+    C = max(target_rows // len(tcps), 1)
+    return tcps, [[lk] * C for lk in links], C
+
+
+def _round_args(links):
+    S, C = len(links), len(links[0])
+    return dict(
+        update_bytes=np.full(S, UPDATE_BYTES, np.int64),
+        download_bytes=np.full(S, UPDATE_BYTES, np.int64),
+        local_train_times=np.full((S, C), TRAIN_TIME),
+        connected=np.zeros((S, C), bool),
+    )
+
+
+def _run_host_loop(tcps, links, kw, rounds):
+    from repro.core.server import _TRANSPORT_STREAM, derive_rng
+    from repro.transport import sim_cohort_round
+
+    outs = []
+    for r in range(rounds):
+        for s, (tcp, lks) in enumerate(zip(tcps, links)):
+            outs.append(
+                sim_cohort_round(
+                    tcp,
+                    lks,
+                    update_bytes=int(kw["update_bytes"][s]),
+                    download_bytes=int(kw["download_bytes"][s]),
+                    local_train_times=kw["local_train_times"][s],
+                    connected=kw["connected"][s],
+                    rng=derive_rng(s, _TRANSPORT_STREAM, r),
+                )
+            )
+    return outs
+
+
+def _run_host_fused(tcps, links, kw, rounds):
+    from repro.core.server import _TRANSPORT_STREAM, derive_rng
+    from repro.transport import sim_grid_round
+
+    return [
+        sim_grid_round(tcps, links, rng=derive_rng(0, _TRANSPORT_STREAM, r), **kw)
+        for r in range(rounds)
+    ]
+
+
+def _run_device(tcps, links, kw, rounds):
+    from repro.transport import sim_grid_round_device, transport_plane_key
+
+    outs = []
+    for r in range(rounds):
+        out = sim_grid_round_device(
+            tcps, links, key=transport_plane_key(0, 2, r), **kw
+        )
+        # bill materialization: success/time/reconnects is what the grid
+        # driver pulls back to the host every round
+        outs.append(
+            (np.asarray(out.success), np.asarray(out.time), np.asarray(out.reconnects))
+        )
+    return outs
+
+
+def time_plane_size(target_rows: int, reps: int = 1):
+    """Median wall times for ROUNDS rounds of the ~``target_rows``-row
+    grid through all three executions (after one untimed warmup pass)."""
+    tcps, links, C = _grid(target_rows)
+    kw = _round_args(links)
+
+    _run_host_loop(tcps, links, kw, 1)
+    _run_host_fused(tcps, links, kw, 1)
+    _run_device(tcps, links, kw, 1)  # compiles the plane program
+
+    loop_t, fused_t, dev_t = [], [], []
+    for _ in range(max(int(reps), 1)):
+        t0 = time.time()
+        _run_host_loop(tcps, links, kw, ROUNDS)
+        loop_t.append(time.time() - t0)
+        t0 = time.time()
+        _run_host_fused(tcps, links, kw, ROUNDS)
+        fused_t.append(time.time() - t0)
+        t0 = time.time()
+        _run_device(tcps, links, kw, ROUNDS)
+        dev_t.append(time.time() - t0)
+    loop_s = float(np.median(loop_t))
+    fused_s = float(np.median(fused_t))
+    dev_s = float(np.median(dev_t))
+    return {
+        "target_rows": target_rows,
+        "rows": len(tcps) * C,
+        "scenarios": len(tcps),
+        "cohort": C,
+        "rounds": ROUNDS,
+        "host_loop_s": round(loop_s, 3),
+        "host_fused_s": round(fused_s, 3),
+        "device_s": round(dev_s, 3),
+        "speedup_vs_loop": round(loop_s / dev_s, 3),
+        "speedup_vs_fused": round(fused_s / dev_s, 3),
+    }
+
+
+def check_parity_exact():
+    """Degenerate loss=0 / jitter=0 grid: the device plane must match the
+    host oracle exactly — the flow mechanics are deterministic, so every
+    stream draw is unused on both sides."""
+    from repro.core.server import _TRANSPORT_STREAM, derive_rng
+    from repro.transport import (
+        BIG_BUFFER,
+        DEFAULT,
+        LAB,
+        TUNED_EDGE,
+        sim_grid_round,
+        sim_grid_round_device,
+        transport_plane_key,
+    )
+
+    C = 16
+    tcps = [DEFAULT, BIG_BUFFER, TUNED_EDGE]
+    links = [[LAB] * C, [LAB.replace(delay=0.3)] * C, [LAB.replace(rate_mbps=1.0)] * C]
+    kw = _round_args(links)
+    host = sim_grid_round(tcps, links, rng=derive_rng(0, _TRANSPORT_STREAM, 0), **kw)
+    dev = sim_grid_round_device(tcps, links, key=transport_plane_key(0, 2, 0), **kw)
+    ok = (
+        bool(np.array_equal(host.success, np.asarray(dev.success)))
+        and bool(np.array_equal(host.reconnects, np.asarray(dev.reconnects)))
+        and bool(
+            np.allclose(host.time, np.asarray(dev.time, np.float64), rtol=1e-4)
+        )
+    )
+    return ok
+
+
+def check_parity_distributional(reps_rounds: int = 3):
+    """Stochastic grid, different streams by design: per-scenario delivery
+    rates must agree within a 4-sigma binomial envelope of the pooled
+    estimate (pooled over ``reps_rounds`` rounds), and median delivered
+    clocks within 20% where both sides deliver a majority of rows."""
+    tcps, links, C = _grid(4096)
+    kw = _round_args(links)
+    S = len(tcps)
+    n = C * reps_rounds
+
+    host = _run_host_fused(tcps, links, kw, reps_rounds)
+    dev = _run_device(tcps, links, kw, reps_rounds)
+    h_succ = np.stack([o.success for o in host])  # [R, S, C]
+    d_succ = np.stack([o[0] for o in dev])
+    h_time = np.stack([o.time for o in host])
+    d_time = np.stack([o[1] for o in dev])
+
+    h_rate = h_succ.transpose(1, 0, 2).reshape(S, n).mean(axis=1)
+    d_rate = d_succ.transpose(1, 0, 2).reshape(S, n).mean(axis=1)
+    pooled = (h_rate + d_rate) / 2.0
+    sigma = np.sqrt(np.maximum(pooled * (1.0 - pooled), 1e-4) * 2.0 / n)
+    rate_gap = np.abs(h_rate - d_rate)
+    rate_ok = bool(np.all(rate_gap <= 4.0 * sigma + 0.01))
+
+    clock_ok = True
+    worst_clock = 0.0
+    for s in range(S):
+        hm = h_succ[:, s, :].reshape(-1)
+        dm = d_succ[:, s, :].reshape(-1)
+        if hm.mean() < 0.5 or dm.mean() < 0.5:
+            continue  # mostly-dead scenarios: clocks are censored
+        qh = float(np.median(h_time[:, s, :].reshape(-1)[hm]))
+        qd = float(np.median(d_time[:, s, :].reshape(-1)[dm]))
+        rel = abs(qh - qd) / max(qh, 1e-9)
+        worst_clock = max(worst_clock, rel)
+        clock_ok = clock_ok and rel <= 0.20
+    return {
+        "rate_ok": rate_ok,
+        "max_rate_gap": round(float(rate_gap.max()), 4),
+        "clock_ok": clock_ok,
+        "max_clock_rel_gap": round(worst_clock, 4),
+        "ok": rate_ok and clock_ok,
+    }
+
+
+def run_end_to_end(fast: bool = True):
+    """Thinned stochastic fig4 sweep through ``run_fl_grid``
+    (transport="fused") on both backends: same grid, same point seeds,
+    host plane vs device plane end to end."""
+    from benchmarks.common import run_fl_grid_experiments
+    from benchmarks.sweep_bench import stochastic_fig4_points
+
+    pts_host = stochastic_fig4_points(fast)
+    pts_dev = [dict(kw, transport_backend="device") for kw in pts_host]
+
+    run_fl_grid_experiments(pts_host, transport="fused")  # warm jit caches
+    run_fl_grid_experiments(pts_dev, transport="fused")
+    t0 = time.time()
+    run_fl_grid_experiments(pts_host, transport="fused")
+    host_s = time.time() - t0
+    t0 = time.time()
+    _, stats = run_fl_grid_experiments(
+        pts_dev, transport="fused", return_stats=True
+    )
+    dev_s = time.time() - t0
+    return {
+        "grid": "fig4_loss stochastic (DES, split streams)",
+        "points": len(pts_host),
+        "sweep_host_s": round(host_s, 3),
+        "sweep_device_s": round(dev_s, 3),
+        "transport_device_dispatches": stats.transport_device_dispatches,
+        "transport_rows": stats.transport_rows,
+    }
+
+
+def run_bench(*, fast: bool = False, reps: int = 1):
+    sizes = [time_plane_size(rows, reps=reps) for rows in SIZES]
+    gate = sizes[-1]
+    parity_exact = check_parity_exact()
+    parity_dist = check_parity_distributional()
+    result = {
+        "bench": "transport_plane",
+        "config": {
+            "grid": "fig4 loss ladder x {DEFAULT, BIG_BUFFER}",
+            "rounds": ROUNDS,
+            "update_bytes": UPDATE_BYTES,
+            "fast": fast,
+            "reps": reps,
+        },
+        "sizes": sizes,
+        "speedup": gate["speedup_vs_loop"],
+        "target_speedup": GATE_SPEEDUP,
+        "meets_target": gate["speedup_vs_loop"] >= GATE_SPEEDUP,
+        "parity_exact": parity_exact,
+        "parity_distributional": parity_dist,
+        "parity": parity_exact and parity_dist["ok"],
+        "end_to_end": run_end_to_end(fast=True),
+    }
+    print("BENCH " + json.dumps(result))
+    return result
+
+
+def main(fast: bool = False, reps: int = 1):
+    result = run_bench(fast=fast, reps=reps)
+    if not result["parity"]:
+        print("transport_plane_bench: PARITY FAILURE", file=sys.stderr)
+        raise SystemExit(1)
+    if not result["meets_target"]:
+        print(
+            f"transport_plane_bench: speedup {result['speedup']} < "
+            f"{GATE_SPEEDUP}x target",
+            file=sys.stderr,
+        )
+        raise SystemExit(1)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="thinned end-to-end grid")
+    ap.add_argument("--reps", type=int, default=1)
+    args = ap.parse_args()
+    main(fast=args.fast, reps=args.reps)

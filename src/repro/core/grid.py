@@ -104,7 +104,8 @@ class GridStats:
     evals_computed: int = 0
     compress_requested: int = 0  # compressed point-rounds
     compress_computed: int = 0  # heavy compress_rows programs actually run
-    transport_dispatches: int = 0  # hoisted sim_grid_round calls (1/round)
+    transport_dispatches: int = 0  # hoisted host sim_grid_round calls
+    transport_device_dispatches: int = 0  # hoisted device-plane programs
     transport_rows: int = 0  # (point, client) rows sampled through them
 
 
@@ -148,52 +149,98 @@ def _plane_transport(
     mode: str,
     transport_seed: int,
     rnd: int,
+    stats: Optional[GridStats] = None,
 ):
-    """Sample every waiting point's cohort transport as ONE
-    ``sim_grid_round`` call: rows are (point, cohort member) pairs, each
-    row carrying its point's TcpParams, effective link, and asymmetric
-    payload bytes (compressed upload, full-model download). Cohort sizes
-    may differ across points — the plane is ragged-aware.
+    """Sample every waiting point's cohort transport as ONE plane call
+    per backend: rows are (point, cohort member) pairs, each row carrying
+    its point's TcpParams, effective link, and asymmetric payload bytes
+    (compressed upload, full-model download). Cohort sizes may differ
+    across points — the plane is ragged-aware.
 
     ``mode="parity"`` hands each scenario its point's OWN derived
     per-round transport stream (``FederatedServer._transport_rng``), so
     outcomes are bitwise identical to each point sampling its transport
-    standalone. ``mode="fused"`` drives the whole plane from one shared
-    stream derived from (transport_seed, round) — one lockstep pass, same
-    mechanisms and distributions, a single shared draw order.
+    standalone (host-backend points only; device-backend points never
+    reach this path — their per-point reference is the device plane, so
+    the driver leaves them on ``per_point``). ``mode="fused"`` drives the
+    whole plane from one shared stream derived from (transport_seed,
+    round) — one lockstep pass, same mechanisms and distributions, a
+    single shared draw order. Fused mode partitions points by
+    ``transport_backend``: host points share one numpy ``sim_grid_round``
+    pass, device points share one ``sim_grid_round_device`` jit program
+    (whole-round flow simulation with zero host steps; outcomes are
+    materialized in one bulk transfer per round).
 
     Returns per-point (success [k], time [k], reconnects [k]) triples in
     ``waiting`` order, ready for ``finish_transport``."""
-    tcps = [servers[i].tcp for i, _ in waiting]
-    links = [pr.links for _, pr in waiting]
-    up = [np.full(len(pr.cohort), pr.upload_bytes, np.int64) for _, pr in waiting]
-    down = [
-        np.full(len(pr.cohort), pr.download_bytes, np.int64) for _, pr in waiting
-    ]
-    ltt = [pr.local_times for _, pr in waiting]
-    conn = [pr.connected for _, pr in waiting]
-    if mode == "parity":
-        rng_kw = dict(rngs=[servers[i]._transport_rng for i, _ in waiting])
-    else:
-        # _GRID_STREAM, not _TRANSPORT_STREAM: the shared plane stream
-        # must be decorrelated from every point's private transport
-        # stream even when transport_seed equals the points' seeds
-        rng_kw = dict(rng=derive_rng(transport_seed, _GRID_STREAM, rnd))
-    out = sim_grid_round(
-        tcps,
-        links,
-        update_bytes=up,
-        download_bytes=down,
-        local_train_times=ltt,
-        connected=conn,
-        **rng_kw,
-    )
-    res = []
-    for s, (_, pr) in enumerate(waiting):
-        k = len(pr.cohort)
-        res.append(
-            (out.success[s][:k], out.time[s][:k], out.reconnects[s][:k].astype(float))
+
+    def _sample(sub: List[Tuple[int, PendingRound]], backend: str):
+        tcps = [servers[i].tcp for i, _ in sub]
+        links = [pr.links for _, pr in sub]
+        up = [np.full(len(pr.cohort), pr.upload_bytes, np.int64) for _, pr in sub]
+        down = [
+            np.full(len(pr.cohort), pr.download_bytes, np.int64) for _, pr in sub
+        ]
+        ltt = [pr.local_times for _, pr in sub]
+        conn = [pr.connected for _, pr in sub]
+        if backend == "device":
+            from repro.transport.plane import (
+                sim_grid_round_device,
+                transport_plane_key,
+            )
+
+            out = sim_grid_round_device(
+                tcps,
+                links,
+                update_bytes=up,
+                download_bytes=down,
+                local_train_times=ltt,
+                connected=conn,
+                # _GRID_STREAM on the device key family: decorrelated from
+                # every point's private per-round device stream by tag
+                key=transport_plane_key(transport_seed, _GRID_STREAM, rnd),
+            )
+            if stats is not None:
+                stats.transport_device_dispatches += 1
+            # one bulk materialization for the round's host bookkeeping
+            return (
+                np.asarray(out.success),
+                np.asarray(out.time, float),
+                np.asarray(out.reconnects),
+            )
+        if mode == "parity":
+            rng_kw = dict(rngs=[servers[i]._transport_rng for i, _ in sub])
+        else:
+            # _GRID_STREAM, not _TRANSPORT_STREAM: the shared plane stream
+            # must be decorrelated from every point's private transport
+            # stream even when transport_seed equals the points' seeds
+            rng_kw = dict(rng=derive_rng(transport_seed, _GRID_STREAM, rnd))
+        out = sim_grid_round(
+            tcps,
+            links,
+            update_bytes=up,
+            download_bytes=down,
+            local_train_times=ltt,
+            connected=conn,
+            **rng_kw,
         )
+        if stats is not None:
+            stats.transport_dispatches += 1
+        return out.success, out.time, out.reconnects
+
+    res: List[Optional[tuple]] = [None] * len(waiting)
+    for backend in ("host", "device"):
+        sub = [
+            (pos, iw)
+            for pos, iw in enumerate(waiting)
+            if servers[iw[0]].config.transport_backend == backend
+        ]
+        if not sub:
+            continue
+        succ, tt, rc = _sample([iw for _, iw in sub], backend)
+        for s, (pos, (_, pr)) in enumerate(sub):
+            k = len(pr.cohort)
+            res[pos] = (succ[s][:k], tt[s][:k], rc[s][:k].astype(float))
     return res
 
 
@@ -300,7 +347,13 @@ def run_fl_grid(
     def _hoistable(srv: FederatedServer) -> bool:
         # the hoist reproduces the BATCHED cohort draw discipline, and a
         # point's selection stream only survives it under the split-rng
-        # contract; everything else keeps sampling inside begin_round
+        # contract; everything else keeps sampling inside begin_round.
+        # Parity mode is defined as bitwise per-point reproduction, and a
+        # device-backend point's per-point reference is the device plane
+        # keyed on its own (seed, stream, round) — a hoisted numpy pass
+        # cannot reproduce it, so such points stay on their own path.
+        if transport == "parity" and srv.config.transport_backend == "device":
+            return False
         return srv.config.stochastic and srv.config.batched and srv.split_streams
 
     for rnd in range(max_rounds):
@@ -322,8 +375,9 @@ def run_fl_grid(
 
         # --- transport plane: ONE stochastic sim_grid_round for the round --
         if waiting:
-            outcomes = _plane_transport(waiting, servers, transport, transport_seed, rnd)
-            stats.transport_dispatches += 1
+            outcomes = _plane_transport(
+                waiting, servers, transport, transport_seed, rnd, stats
+            )
             stats.transport_rows += sum(len(pr.cohort) for _, pr in waiting)
             for (i, pr), (succ, tt, rc) in zip(waiting, outcomes):
                 job = servers[i].finish_transport(pr, succ, tt, rc)

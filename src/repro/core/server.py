@@ -191,6 +191,21 @@ class ServerConfig:
     # grid's shared fused plane) and to how many draws transport consumed.
     # engine="fused_transport" implies "split".
     rng_streams: str = "single"
+    # Where stochastic transport is SAMPLED. "host" keeps the numpy
+    # Monte-Carlo plane (the parity oracle). "device" routes the cohort
+    # through the jax transport plane (repro.transport.plane): the whole
+    # round's flow simulation — SYN ladder, AIMD windows, RTO backoff,
+    # keepalive scan — runs as one jit dispatch on counter-based
+    # jax.random streams keyed per (seed, stream, round). Device draws are
+    # decorrelated from every numpy stream by construction, so the
+    # discipline is ALWAYS effectively "split" (transport consumes zero
+    # host draws; selection sequences are engine-invariant). Requires
+    # stochastic=True and batched=True — there is no analytic or
+    # sequential device path. Host/device outcome parity is the
+    # stream-mapping contract in repro.transport.plane's module docs:
+    # exact on degenerate (loss=0, jitter=0) rows, distributional
+    # elsewhere.
+    transport_backend: str = "host"
 
     def __post_init__(self):
         # typos here would silently select the legacy stream discipline
@@ -199,6 +214,14 @@ class ServerConfig:
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.rng_streams not in ("single", "split"):
             raise ValueError(f"unknown rng_streams {self.rng_streams!r}")
+        if self.transport_backend not in ("host", "device"):
+            raise ValueError(f"unknown transport_backend {self.transport_backend!r}")
+        if self.transport_backend == "device" and not (self.stochastic and self.batched):
+            raise ValueError(
+                "transport_backend='device' requires stochastic=True and "
+                "batched=True (the device plane is a Monte-Carlo cohort "
+                "sampler; there is no analytic or sequential device path)"
+            )
 
 
 # stream tags for the split-rng discipline (spawn_key components).
@@ -273,6 +296,7 @@ class FederatedServer:
         return (
             self.config.rng_streams == "split"
             or self.config.engine == "fused_transport"
+            or self.config.transport_backend == "device"
         )
 
     def _round_transport_rng(self) -> np.random.Generator:
@@ -333,6 +357,33 @@ class FederatedServer:
         rng = self._round_transport_rng()
         if cfg.stochastic:
             connected = pending.connected
+            if cfg.transport_backend == "device":
+                # device-resident plane: the S=1 case of the grid's fused
+                # [S*C] program — one jit dispatch for the whole cohort's
+                # flow simulation, keyed on this round's transport stream.
+                from repro.transport.plane import (
+                    sim_grid_round_device,
+                    transport_plane_key,
+                )
+
+                out = sim_grid_round_device(
+                    self.tcp,
+                    [links],
+                    update_bytes=np.full(
+                        (1, len(cohort)), pending.upload_bytes, np.int64
+                    ),
+                    download_bytes=np.full(
+                        (1, len(cohort)), pending.download_bytes, np.int64
+                    ),
+                    local_train_times=local_times[None],
+                    connected=connected[None],
+                    key=transport_plane_key(cfg.seed, _TRANSPORT_STREAM, pending.rnd),
+                )
+                return (
+                    np.asarray(out.success)[0],
+                    np.asarray(out.time, float)[0],
+                    np.asarray(out.reconnects, float)[0],
+                )
             if cfg.engine == "fused_transport":
                 # opt-in shared-rng plane (sim_grid_round fused mode): the
                 # S=1 special case of the grid driver's (S, C) transport

@@ -113,6 +113,18 @@ def downcast_bf16_rows(x, *, tile=2048, interpret=False):
     return downcast_bf16_rows_flat(x, tile=tile, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def segment_sum(values, segment_ids, *, num_segments):
+    """Per-segment reduction: sum ``values[i]`` into ``segment_ids[i]``.
+
+    The device transport plane's byte-accounting reduce — per-scenario
+    delivered wire bytes from flat [S*C] row outcomes without leaving the
+    device. ``num_segments`` is static (one compiled program per grid
+    shape). Oracle: ``repro.kernels.ref.segment_sum_ref``.
+    """
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+
+
 def dequantize_tree(payload, template):
     vec, meta = flatten_to_vector(template)
     deq = dequantize_flat(payload["q"], payload["scale"])

@@ -49,6 +49,12 @@ def downcast_bf16_rows_ref(x):
     return x.astype(jnp.float32).astype(jnp.bfloat16)
 
 
+def segment_sum_ref(values, segment_ids, num_segments):
+    """values [K], segment_ids [K] int -> [num_segments] scatter-add."""
+    out = jnp.zeros((num_segments,) + values.shape[1:], values.dtype)
+    return out.at[segment_ids].add(values)
+
+
 def swiglu_ref(x, w_gate, w_up, w_down):
     g = (x.astype(jnp.float32) @ w_gate.astype(jnp.float32))
     u = (x.astype(jnp.float32) @ w_up.astype(jnp.float32))

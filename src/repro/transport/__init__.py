@@ -34,6 +34,16 @@ from repro.transport.des import (
 )
 from repro.transport.params import BIG_BUFFER, DEFAULT, TUNED_EDGE, TcpParams
 
+
+def __getattr__(name):
+    # the device transport plane pulls in jax; keep the base transport
+    # package importable (and fast) without it
+    if name in ("sim_grid_round_device", "device_sim_rows", "transport_plane_key"):
+        from repro.transport import plane
+
+        return getattr(plane, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "LinkProfile",
     "PROFILES",
@@ -67,4 +77,7 @@ __all__ = [
     "sim_client_round",
     "sim_cohort_round",
     "sim_grid_round",
+    "sim_grid_round_device",
+    "device_sim_rows",
+    "transport_plane_key",
 ]

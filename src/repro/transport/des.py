@@ -287,6 +287,10 @@ class GridOutcome:
     bytes_acked: np.ndarray
     trace: Optional[Dict[str, np.ndarray]] = None
     mask: Optional[np.ndarray] = None
+    # Per-scenario delivered wire bytes ([S]); populated by the device
+    # transport plane (reduced on device via the kernels segment-sum
+    # helper), None on the host paths.
+    scenario_bytes: Optional[np.ndarray] = None
 
 
 @dataclass

@@ -1,0 +1,604 @@
+"""Device-resident transport plane: one XLA program per transport round.
+
+JAX twin of the vectorized Monte-Carlo sampler in ``repro.transport.des``:
+the per-flow loops (``_grid_handshake``'s SYN ladder, ``_grid_idle``'s
+keepalive scan, ``_grid_transfer``'s AIMD/RTO windows) are reformulated as
+``lax.while_loop`` programs over stacked ``[k]`` row state (cwnd, acked
+segments, RTO backoff, clock, active mask), with counter-based
+``jax.random`` streams replacing the host's ``np.random.Generator`` draws.
+One FL transport round for an ``S x C`` characterization grid is ONE jit
+dispatch (``device_sim_rows``) instead of O(loop-iterations) host-side
+numpy steps — at grid scale the host plane spends hundreds of interpreted
+iterations per round; here they run inside compiled while loops.
+
+The numpy plane stays the PARITY ORACLE. The stream-mapping contract
+between the two (tested in tests/test_transport_plane.py and gated on
+every CI run by benchmarks/transport_plane_bench.py):
+
+- **Exact where the draw order can be preserved.** On degenerate rows no
+  draw influences the outcome (loss=0 and jitter=0: every delivery is
+  certain and every RTT is exactly 2*delay), so host and device must
+  agree exactly on the delivered set, reconnects, byte accounting, and
+  every sparse event count, and on the simulated clock to dtype
+  tolerance (the device plane accumulates clocks in the default JAX
+  float width; the host oracle is float64).
+- **Distributional gates elsewhere.** Stochastic rows consume different
+  streams (numpy sequential draws vs counter-based per-stage fold-ins),
+  so outcomes are compared as statistics: delivery rate and clock
+  quantiles must agree within sampling tolerance across the paper's
+  fig3/fig4 link grids. Three deliberate reformulations keep the
+  *mechanism* distributions intact while making the device program fast:
+
+  1. RTT jitter draws one normal scaled by sqrt(2)*jitter where the host
+     sums two N(0, jitter) draws — identical distribution, half the
+     erf_inv cost.
+  2. Two-way survival draws one uniform against (1-loss)^2 where the
+     host draws both directions — identical Bernoulli.
+  3. Window loss draws from an exact-tail binomial: P(lost=0) = q^w and
+     P(lost=w) = p^w are computed exactly (these two tails *are* the
+     transport mechanics — clean-window cwnd growth and whole-window RTO
+     stalls), and the interior (partial-loss magnitude) uses a clipped
+     normal approximation of Bin(w, p). The RTO backoff escalation that
+     the host steps draw-by-draw is collapsed to one closed-form
+     truncated-geometric inversion per stall — bitwise the same
+     distribution the host loop samples, zero loop iterations.
+
+Keys: ``transport_plane_key(seed, stream, rnd)`` is the device analog of
+``repro.core.server.derive_rng`` — same (seed, stream tag, round)
+keying, so a device point's transport stream is independent per round
+and decorrelated from every host stream by construction (different
+generator family).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax import random as jr
+
+from repro.transport.des import (
+    _TRACE_FIELDS,
+    GridOutcome,
+    _LinkArrays,
+    _per_scenario_rows,
+    _TcpArrays,
+)
+from repro.transport.params import TcpParams
+
+_MAX_ITERS = 200_000  # host loop's runaway cap, mirrored
+
+
+class TcpPlane(NamedTuple):
+    """Per-row TcpParams as device arrays (the jnp twin of _TcpArrays)."""
+
+    syn_rto: jax.Array
+    syn_retries: jax.Array
+    handshake_budget: jax.Array
+    ka_time: jax.Array
+    ka_intvl: jax.Array
+    ka_probes: jax.Array
+    retries2: jax.Array
+    rmem_max: jax.Array  # reorder-buffer cap: rmem * 48 (sysctl max)
+    sack: jax.Array
+    initial_rto: jax.Array
+    max_rto: jax.Array
+    mss: jax.Array
+    wnd_max: jax.Array  # window_bytes // mss segments, >= 2
+
+    @classmethod
+    def from_arrays(cls, ta: _TcpArrays) -> "TcpPlane":
+        f = lambda x: jnp.asarray(np.asarray(x, np.float64))
+        i = lambda x: jnp.asarray(np.asarray(x, np.int32))
+        return cls(
+            syn_rto=f(ta.syn_rto),
+            syn_retries=i(ta.syn_retries),
+            handshake_budget=f(ta.handshake_budget),
+            ka_time=f(ta.ka_time),
+            ka_intvl=f(ta.ka_intvl),
+            ka_probes=i(ta.ka_probes),
+            retries2=i(ta.retries2),
+            rmem_max=f(ta.rmem * 48),
+            sack=jnp.asarray(ta.sack),
+            initial_rto=f(ta.initial_rto),
+            max_rto=f(ta.max_rto),
+            mss=f(ta.mss),
+            wnd_max=f(np.maximum(ta.window_bytes // ta.mss, 2)),
+        )
+
+
+class LinkPlane(NamedTuple):
+    """Per-row LinkProfile as device arrays (the jnp twin of _LinkArrays)."""
+
+    loss: jax.Array
+    surv2: jax.Array  # (1-loss)^2: both directions survive
+    delay: jax.Array
+    jitter2: jax.Array  # sqrt(2)*jitter: std of the summed two-way jitter
+    rate_mbps: jax.Array
+    queue_limit: jax.Array
+    middlebox_timeout: jax.Array
+
+    @classmethod
+    def from_arrays(cls, la: _LinkArrays) -> "LinkPlane":
+        f = lambda x: jnp.asarray(np.asarray(x, np.float64))
+        return cls(
+            loss=f(la.loss),
+            surv2=f((1.0 - la.loss) ** 2),
+            delay=f(la.delay),
+            jitter2=f(np.sqrt(2.0) * la.jitter),
+            rate_mbps=f(la.rate_mbps),
+            queue_limit=f(la.queue_limit),
+            middlebox_timeout=f(la.middlebox_timeout),
+        )
+
+
+def transport_plane_key(seed: int, stream: int, rnd: int) -> jax.Array:
+    """Counter-based stream per (seed, stream tag, round): the jax.random
+    analog of ``repro.core.server.derive_rng`` for the device plane."""
+    return jr.fold_in(jr.fold_in(jr.PRNGKey(seed), stream), rnd)
+
+
+def _rtt(lp: LinkPlane, key, extra_shape=()):
+    """RTT sample: 2*delay + N(0, sqrt(2)*jitter), floored like the host.
+    (The host sums two N(0, jitter) draws — same distribution.)"""
+    shape = lp.delay.shape + extra_shape
+    z = jr.normal(key, shape)
+    if extra_shape:
+        z = z * lp.jitter2[:, None] + 2.0 * lp.delay[:, None]
+    else:
+        z = z * lp.jitter2 + 2.0 * lp.delay
+    return jnp.maximum(z, 1e-5)
+
+
+def _exp2i(v):
+    """2**v for small non-negative integer-valued floats, via exponent-bit
+    construction — the RTO ladder's power-of-two steps without a
+    transcendental pass (the transfer loop runs this every iteration)."""
+    if v.dtype == jnp.float64:
+        bits = (jnp.clip(v, 0.0, 1000.0).astype(jnp.int64) + 1023) << 52
+        return lax.bitcast_convert_type(bits, jnp.float64)
+    bits = (jnp.clip(v, 0.0, 120.0).astype(jnp.int32) + 127) << 23
+    return lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _floor_log2(x):
+    """floor(log2(x)) for x >= 1, via exponent-bit extraction (exact for
+    normalized floats; the backoff ladder only needs the integer part)."""
+    if x.dtype == jnp.float64:
+        e = (lax.bitcast_convert_type(x, jnp.int64) >> 52) - 1023
+    else:
+        e = (lax.bitcast_convert_type(x, jnp.int32) >> 23) - 127
+    return e.astype(x.dtype)
+
+
+def _normal_pair(u1, u2):
+    """Box–Muller: two EXACT independent standard normals from two
+    uniforms. Cheaper than two erf_inv-based ``jax.random.normal`` draws —
+    this pair is the dominant per-iteration cost of the transfer loop."""
+    r = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, 1e-12)))
+    theta = (2.0 * jnp.pi) * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def _binomial_exact_tails(u, z, n, p):
+    """lost ~ Bin(n, p) with EXACT boundary masses and a clipped-normal
+    interior, driven by a caller-supplied uniform ``u`` and standard
+    normal ``z``.
+
+    P(lost=0) = (1-p)^n and P(lost=n) = p^n are computed exactly — these
+    tails are what the transport mechanics branch on (clean window vs
+    SACK holes vs whole-window RTO stall), so they must not be
+    approximated. Interior magnitudes (how many of a partially-lost
+    window dropped) use round(N(np, np(1-p))) clipped to [1, n-1] — the
+    CLT regime, and only ever consumed as a byte count. n is float, may
+    be 0 (masked rows; returns 0)."""
+    logp = jnp.log(jnp.clip(p, 1e-30, 1.0))
+    log_q = jnp.log1p(-jnp.clip(p, 0.0, 1.0 - 1e-7))
+    p_zero = jnp.exp(n * log_q)
+    p_all = jnp.exp(n * logp)
+    std = jnp.sqrt(jnp.maximum(n * p * (1.0 - p), 1e-12))
+    interior = jnp.clip(jnp.round(n * p + z * std), 1.0, jnp.maximum(n - 1.0, 1.0))
+    lost = jnp.where(u < p_zero, 0.0, jnp.where(u >= 1.0 - p_all, n, interior))
+    return jnp.where(n <= 0, 0.0, lost)
+
+
+def _plane_handshake(tp: TcpPlane, lp: LinkPlane, key, attempts: int):
+    """SYN ladder, all attempts drawn at once ([k, A] like the host's
+    ``_grid_handshake``). Returns (success, time, syn_attempts) for every
+    row; callers mask by need."""
+    k1, k2 = jr.split(key)
+    a = jnp.arange(attempts, dtype=tp.syn_rto.dtype)[None, :]
+    t_send = a * tp.syn_rto[:, None]
+    rtt = _rtt(lp, k1, (attempts,))
+    delivered = jr.uniform(k2, rtt.shape) < lp.surv2[:, None]
+    budget = tp.handshake_budget[:, None]
+    allowed = (a <= tp.syn_retries[:, None].astype(t_send.dtype)) & (t_send <= budget)
+    ok = delivered & allowed & (t_send + rtt <= budget)
+    success = ok.any(axis=1)
+    first = jnp.argmax(ok, axis=1)
+    t_first = jnp.take_along_axis(t_send + rtt, first[:, None], axis=1)[:, 0]
+    time = jnp.where(success, t_first, tp.handshake_budget)
+    syn_attempts = jnp.where(
+        success, first + 1, allowed.sum(axis=1)
+    ).astype(jnp.int32)
+    return success, time, syn_attempts
+
+
+def _plane_idle(tp: TcpPlane, lp: LinkPlane, idle_time, key, need):
+    """Keepalive/middlebox scan as a lockstep while_loop. Returns
+    (state [k] int32: 0 alive / 1 detected_dead / 2 silent_dead,
+    probes, probe_fails); rows outside ``need`` stay 0/alive."""
+    zero_i = jnp.zeros_like(tp.ka_probes)
+    mbox = lp.middlebox_timeout
+    no_probe = tp.ka_time >= idle_time
+    state0 = jnp.where(need & no_probe & (idle_time > mbox), 2, 0).astype(jnp.int32)
+    undecided0 = need & ~no_probe
+
+    def cond(s):
+        return (s["undecided"] & (s["t"] <= idle_time)).any()
+
+    def body(s):
+        key, k1, k2 = jr.split(s["key"], 3)
+        active = s["undecided"] & (s["t"] <= idle_time)
+        rtt = _rtt(lp, k1)
+        ok = (jr.uniform(k2, rtt.shape) < lp.surv2) & (rtt <= tp.ka_intvl)
+        gap = active & (s["t"] - s["last_refresh"] > mbox)
+        state = jnp.where(gap, 2, s["state"])
+        undecided = s["undecided"] & ~gap
+        active = active & ~gap
+        refreshed = active & ok
+        failed = active & ~ok
+        consecutive = jnp.where(
+            failed, s["consecutive"] + 1, jnp.where(refreshed, 0, s["consecutive"])
+        )
+        dead = failed & (consecutive >= tp.ka_probes)
+        return {
+            "key": key,
+            "t": s["t"] + tp.ka_intvl,
+            "last_refresh": jnp.where(refreshed, s["t"], s["last_refresh"]),
+            "consecutive": consecutive,
+            "state": jnp.where(dead, 1, state),
+            "undecided": undecided & ~dead,
+            "probes": s["probes"] + active,
+            "probe_fails": s["probe_fails"] + failed,
+        }
+
+    out = lax.while_loop(
+        cond,
+        body,
+        {
+            "key": key,
+            "t": tp.ka_time,
+            "last_refresh": jnp.zeros_like(tp.ka_time),
+            "consecutive": zero_i,
+            "state": state0,
+            "undecided": undecided0,
+            "probes": zero_i,
+            "probe_fails": zero_i,
+        },
+    )
+    tail = out["undecided"] & (idle_time - out["last_refresh"] > mbox)
+    state = jnp.where(tail, 2, out["state"])
+    return state, out["probes"], out["probe_fails"]
+
+
+def _rto_backoff(tp: TcpPlane, lp: LinkPlane, u, stalled, rto):
+    """The host's draw-by-draw RTO escalation loop in closed form.
+
+    The host loop samples, per stalled row, a run of consecutive
+    retransmission losses: continue while uniform < p, doubling the
+    backed-off timer (capped at max_rto) each time, declaring the
+    connection dead when the run reaches ``tcp_retries2``. That run
+    length is a truncated geometric — sampled here EXACTLY via inversion
+    (G = floor(log u / log p)), with the summed stall time in closed form:
+    sum_{j=1..D} min(rto * 2^j, max_rto). Same distribution as the host
+    loop, zero loop iterations. ``u`` is a caller-supplied uniform.
+    Returns (dead, stall_time, rto_out)."""
+    logp = jnp.log(jnp.clip(lp.loss, 1e-12, 1.0 - 1e-12))
+    g = jnp.floor(jnp.log(jnp.maximum(u, 1e-38)) / logp)
+    dmax = (tp.retries2 - 1).astype(rto.dtype)
+    dead = stalled & (g >= dmax)
+    d = jnp.minimum(g, dmax)
+    # number of doublings before the timer saturates at max_rto
+    l_cap = _floor_log2(jnp.maximum(tp.max_rto / rto, 1.0))
+    m = jnp.clip(l_cap, 0.0, d)
+    stall = rto * (_exp2i(m + 1.0) - 2.0) + (d - m) * tp.max_rto
+    rto_out = jnp.minimum(rto * _exp2i(d), tp.max_rto)
+    return dead, jnp.where(stalled, stall, 0.0), jnp.where(stalled, rto_out, rto)
+
+
+def _plane_transfer(tp: TcpPlane, lp: LinkPlane, nbytes, key, need):
+    """AIMD window-by-window transfer as one lockstep while_loop
+    (the device twin of ``_grid_transfer``). Returns (success, time,
+    rto_stalls, retrans_windows); rows outside ``need`` return zeros."""
+    fdt = tp.initial_rto.dtype
+    segs_total = jnp.ceil(jnp.maximum(nbytes, 1.0) / tp.mss)
+    segs_total = jnp.maximum(segs_total, 1.0)
+    zero_i = jnp.zeros_like(tp.retries2)
+
+    def cond(s):
+        return s["active"].any() & (s["iters"] < _MAX_ITERS)
+
+    def body(s):
+        key, kd = jr.split(s["key"])
+        # One hash pass covers the whole iteration: a Box–Muller normal
+        # pair (RTT jitter + binomial interior) and two plain uniforms
+        # (binomial tail selector + RTO-backoff geometric).
+        u = jr.uniform(kd, (4,) + lp.loss.shape)
+        z_rtt, z_bin = _normal_pair(u[0], u[1])
+        active = s["active"]
+        rtt = jnp.maximum(z_rtt * lp.jitter2 + 2.0 * lp.delay, 1e-5)
+        rate_cap = jnp.where(
+            lp.rate_mbps > 0,
+            jnp.maximum(jnp.floor(lp.rate_mbps * 1e6 / 8.0 * rtt / tp.mss), 1.0),
+            jnp.asarray(1e18, fdt),
+        )
+        w = jnp.minimum(
+            jnp.minimum(jnp.floor(s["cwnd"]), tp.wnd_max),
+            jnp.minimum(lp.queue_limit, rate_cap),
+        )
+        remaining = jnp.maximum(segs_total - s["acked"] + s["pending"], 0.0)
+        w = jnp.minimum(jnp.maximum(w, 1.0), remaining)
+        w = jnp.where(active, w, 0.0)
+        lost = _binomial_exact_tails(u[2], z_bin, w, lp.loss)
+        delivered = w - lost
+        t = jnp.where(active, s["t"] + rtt, s["t"])
+
+        # --- whole-window loss -> RTO backoff, collapsed to closed form ---
+        stalled = active & (delivered == 0)
+        t = t + jnp.where(stalled, s["rto"], 0.0)
+        dead, stall_t, rto = _rto_backoff(tp, lp, u[3], stalled, s["rto"])
+        t = t + stall_t
+        active = active & ~dead
+        surv = stalled & active
+        cwnd = jnp.where(surv, 10.0, s["cwnd"])
+        rto = jnp.where(surv, jnp.minimum(rto * 2.0, tp.max_rto), rto)
+
+        # --- progress: ack, SACK holes, cwnd evolution ---
+        prog = active & (delivered > 0)
+        rto = jnp.where(prog, tp.initial_rto, rto)
+        holed = prog & (lost > 0) & tp.sack
+        holed_count = holed  # counted before the buffer-death filter, like the host
+        reorder = jnp.where(holed, s["reorder"] + delivered * tp.mss, s["reorder"])
+        buf_dead = holed & (reorder > tp.rmem_max)
+        active = active & ~buf_dead
+        holed = holed & ~buf_dead
+        cwnd = jnp.where(holed, jnp.maximum(cwnd / 2.0, 2.0), cwnd)
+        pending = jnp.where(holed, lost, s["pending"])
+        clean = prog & ~holed & active
+        reorder = jnp.where(clean, 0.0, reorder)
+        pending = jnp.where(clean, 0.0, pending)
+        cwnd = jnp.where(
+            clean,
+            jnp.where(cwnd >= tp.wnd_max / 2.0, cwnd + 1.0, cwnd * 2.0),
+            cwnd,
+        )
+        acked = jnp.where(prog & active, s["acked"] + delivered, s["acked"])
+        done = active & (acked >= segs_total)
+        return {
+            "key": key,
+            "t": t,
+            "cwnd": cwnd,
+            "acked": acked,
+            "pending": pending,
+            "rto": rto,
+            "reorder": reorder,
+            "active": active & ~done,
+            "success": s["success"] | done,
+            "rto_stalls": s["rto_stalls"] + stalled,
+            "retrans_windows": s["retrans_windows"] + holed_count,
+            "iters": s["iters"] + 1,
+        }
+
+    out = lax.while_loop(
+        cond,
+        body,
+        {
+            "key": key,
+            "t": jnp.zeros_like(tp.initial_rto),
+            "cwnd": jnp.full_like(tp.initial_rto, 10.0),
+            "acked": jnp.zeros_like(tp.initial_rto),
+            "pending": jnp.zeros_like(tp.initial_rto),
+            "rto": tp.initial_rto,
+            "reorder": jnp.zeros_like(tp.initial_rto),
+            "active": need,
+            "success": jnp.zeros_like(need) & False,
+            "rto_stalls": zero_i,
+            "retrans_windows": zero_i,
+            "iters": jnp.int32(0),
+        },
+    )
+    return out["success"], out["t"], out["rto_stalls"], out["retrans_windows"]
+
+
+@functools.partial(jax.jit, static_argnames=("attempts",))
+def _device_round(tp: TcpPlane, lp: LinkPlane, up, down, ltt, connected, key, attempts):
+    """One full FL transport round for a [k] row plane, as ONE device
+    program: handshake-if-needed -> download -> idle (keepalive/middlebox)
+    -> reconnect-if-dead -> upload. The jit twin of ``des._sim_rows``."""
+    k_hs, k_dn, k_idle, k_re, k_up = jr.split(key, 5)
+    zero_i = jnp.zeros_like(tp.retries2)
+    t = jnp.zeros_like(tp.initial_rto)
+    counts = {name: zero_i for name in _TRACE_FIELDS}
+
+    need = ~connected
+    ok, ht, att = _plane_handshake(tp, lp, k_hs, attempts)
+    t = t + jnp.where(need, ht, 0.0)
+    reconnects = need.astype(jnp.int32)
+    alive = ok | ~need
+    counts["syn_attempts"] = jnp.where(need, att, 0)
+
+    ok, dt, stalls, rwnd = _plane_transfer(tp, lp, down, k_dn, alive)
+    t = t + dt
+    counts["rto_stalls"] = counts["rto_stalls"] + stalls
+    counts["retrans_windows"] = counts["retrans_windows"] + rwnd
+    alive = alive & ok
+
+    state, probes, pfails = _plane_idle(tp, lp, ltt, k_idle, alive)
+    t = t + jnp.where(alive, ltt, 0.0)
+    counts["keepalive_probes"] = probes
+    counts["keepalive_failures"] = pfails
+    silent = alive & (state == 2)
+    counts["mbox_drops"] = silent.astype(jnp.int32)
+    counts["detected_dead"] = (alive & (state == 1)).astype(jnp.int32)
+    # silent drops are discovered on send: deterministic escalating stall
+    stall = jnp.minimum(
+        sum(jnp.minimum(tp.initial_rto * (2.0**i), tp.max_rto) for i in range(6)),
+        60.0,
+    )
+    t = t + jnp.where(silent, stall, 0.0)
+    need_hs = alive & (state != 0)
+    ok, ht, att = _plane_handshake(tp, lp, k_re, attempts)
+    t = t + jnp.where(need_hs, ht, 0.0)
+    reconnects = reconnects + need_hs
+    alive = alive & (ok | ~need_hs)
+    counts["syn_attempts"] = counts["syn_attempts"] + jnp.where(need_hs, att, 0)
+
+    ok, ut, stalls, rwnd = _plane_transfer(tp, lp, up, k_up, alive)
+    t = t + ut
+    counts["rto_stalls"] = counts["rto_stalls"] + stalls
+    counts["retrans_windows"] = counts["retrans_windows"] + rwnd
+    alive = alive & ok
+
+    bytes_acked = jnp.where(alive, up + down, 0.0)
+    return alive, t, reconnects, bytes_acked, counts
+
+
+def device_sim_rows(
+    ta: _TcpArrays,
+    la: _LinkArrays,
+    *,
+    up_bytes,
+    down_bytes,
+    local_train_times,
+    connected,
+    key,
+):
+    """One FL round for a flat row plane on the device (jnp outputs:
+    success, time, reconnects, bytes_acked, counts). The SYN-ladder width
+    is static per distinct max(tcp_syn_retries) — one compiled program per
+    (row count, ladder width)."""
+    tp = TcpPlane.from_arrays(ta)
+    lp = LinkPlane.from_arrays(la)
+    attempts = int(ta.syn_retries.max()) + 1 if ta.syn_retries.size else 1
+    fdt = tp.initial_rto.dtype
+    k = la.loss.shape[0]
+    up = jnp.broadcast_to(jnp.asarray(np.asarray(up_bytes, np.float64), fdt), (k,))
+    down = jnp.broadcast_to(jnp.asarray(np.asarray(down_bytes, np.float64), fdt), (k,))
+    ltt = jnp.asarray(np.asarray(local_train_times, np.float64), fdt)
+    conn = jnp.asarray(np.asarray(connected, bool))
+    return _device_round(tp, lp, up, down, ltt, conn, key, attempts=attempts)
+
+
+def sim_grid_round_device(
+    tcps,
+    links,
+    *,
+    update_bytes,
+    local_train_times,
+    connected,
+    key,
+    download_bytes=None,
+    trace: bool = False,
+) -> GridOutcome:
+    """Device twin of ``des.sim_grid_round``'s fused mode: one jit
+    dispatch samples the whole S x C grid round on a single counter-based
+    stream (``key``; see ``transport_plane_key``). Arguments follow
+    ``sim_grid_round`` (scalar / length-S / [S, C] payload bytes, ragged
+    ``links`` supported). Outputs are a ``GridOutcome`` of DEVICE arrays —
+    callers that bookkeep on the host should materialize them once with
+    ``np.asarray`` per field, not element-by-element — plus
+    ``scenario_bytes``: per-scenario delivered wire bytes, reduced on
+    device via the kernels segment-sum helper."""
+    from repro.kernels.ops import segment_sum
+
+    S = len(links)
+    tcp_list = [tcps] * S if isinstance(tcps, TcpParams) else list(tcps)
+    sizes = [len(row) for row in links]
+    ragged = S > 0 and any(c != sizes[0] for c in sizes)
+
+    if ragged:
+        up_s = _per_scenario_rows(update_bytes, sizes, np.int64)
+        down_s = (
+            up_s
+            if download_bytes is None
+            else _per_scenario_rows(download_bytes, sizes, np.int64)
+        )
+        ltt_s = _per_scenario_rows(local_train_times, sizes, float)
+        conn_s = _per_scenario_rows(connected, sizes, bool)
+        scen = np.repeat(np.arange(S), sizes)
+        ta = _TcpArrays.from_params(tcp_list).take(scen)
+        la = _LinkArrays.from_links([l for row in links for l in row])
+        up = np.concatenate(up_s) if S else np.zeros(0, np.int64)
+        down = np.concatenate(down_s) if S else np.zeros(0, np.int64)
+        ltt = np.concatenate(ltt_s) if S else np.zeros(0)
+        conn = np.concatenate(conn_s) if S else np.zeros(0, bool)
+    else:
+        C = sizes[0] if S else 0
+
+        def _bytes_grid(b):
+            b = np.asarray(b, np.int64)
+            if b.ndim == 2:
+                return b.reshape(S, C)
+            return np.broadcast_to(b.reshape(-1, 1) if b.ndim == 1 else b, (S, C))
+
+        up = _bytes_grid(update_bytes).reshape(-1)
+        down = (
+            up
+            if download_bytes is None
+            else _bytes_grid(download_bytes).reshape(-1)
+        )
+        ltt = np.asarray(local_train_times, float).reshape(-1)
+        conn = np.asarray(connected, bool).reshape(-1)
+        scen = np.repeat(np.arange(S), C)
+        ta = _TcpArrays.from_params(tcp_list).take(scen)
+        la = _LinkArrays.from_links([l for row in links for l in row])
+
+    alive, t, reconnects, bytes_acked, counts = device_sim_rows(
+        ta,
+        la,
+        up_bytes=up,
+        down_bytes=down,
+        local_train_times=ltt,
+        connected=conn,
+        key=key,
+    )
+    scenario_bytes = segment_sum(bytes_acked, jnp.asarray(scen), num_segments=S)
+
+    if not ragged:
+        C = sizes[0] if S else 0
+        shape = (S, C)
+        return GridOutcome(
+            alive.reshape(shape),
+            t.reshape(shape),
+            reconnects.reshape(shape),
+            bytes_acked.reshape(shape),
+            {f: counts[f].reshape(shape) for f in _TRACE_FIELDS} if trace else None,
+            scenario_bytes=scenario_bytes,
+        )
+
+    C = max(sizes) if S else 0
+    mask = np.zeros((S, C), bool)
+    for s, c in enumerate(sizes):
+        mask[s, :c] = True
+    rows_i = jnp.asarray(scen)
+    cols_i = jnp.asarray(
+        np.concatenate([np.arange(c) for c in sizes]) if S else np.zeros(0, np.int64)
+    )
+
+    def scatter(flat, fill):
+        return jnp.full((S, C), fill, flat.dtype).at[rows_i, cols_i].set(flat)
+
+    return GridOutcome(
+        scatter(alive, False),
+        scatter(t, 0.0),
+        scatter(reconnects, 0),
+        scatter(bytes_acked, 0.0),
+        {f: scatter(counts[f], 0) for f in _TRACE_FIELDS} if trace else None,
+        mask=mask,
+        scenario_bytes=scenario_bytes,
+    )

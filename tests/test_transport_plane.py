@@ -1,0 +1,317 @@
+"""Device transport plane tests: host-oracle parity (exact on the
+degenerate path, distributional on stochastic paths), counter-based
+stream determinism, ragged grids, the segment-sum kernel, and the
+transport_backend wiring through ServerConfig / run_fl_grid."""
+
+import numpy as np
+import pytest
+
+from repro.core.server import _TRANSPORT_STREAM, derive_rng
+from repro.transport import (
+    BIG_BUFFER,
+    DEFAULT,
+    LAB,
+    TUNED_EDGE,
+    sim_grid_round,
+    sim_grid_round_device,
+    transport_plane_key,
+)
+
+UPD = 300_000
+TT = 30.0
+
+
+def _round_kwargs(links, *, connected=False):
+    S, C = len(links), max(len(row) for row in links)
+    return dict(
+        update_bytes=np.full(S, UPD, np.int64),
+        download_bytes=np.full(S, UPD, np.int64),
+        local_train_times=np.full((S, C), TT),
+        connected=np.full((S, C), connected, bool),
+    )
+
+
+def _host(tcps, links, *, rnd=0, **kw):
+    return sim_grid_round(
+        tcps, links, rng=derive_rng(0, _TRANSPORT_STREAM, rnd), **kw
+    )
+
+
+def _device(tcps, links, *, rnd=0, **kw):
+    return sim_grid_round_device(
+        tcps, links, key=transport_plane_key(0, _TRANSPORT_STREAM, rnd), **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# exact parity: the degenerate (loss=0, jitter=0) path
+# ---------------------------------------------------------------------------
+
+
+def test_degenerate_grid_exact_parity():
+    """loss=0 / jitter=0 flow mechanics are deterministic — every stream
+    draw is unused on both sides, so the device plane must reproduce the
+    host oracle: discrete fields bitwise, clocks to float32 tolerance."""
+    C = 12
+    tcps = [DEFAULT, BIG_BUFFER, TUNED_EDGE, DEFAULT]
+    links = [
+        [LAB] * C,
+        [LAB.replace(delay=0.3)] * C,
+        [LAB.replace(rate_mbps=1.0)] * C,
+        [LAB.replace(delay=8.0)] * C,  # dead scenario: SYN ladder exhausts
+    ]
+    kw = _round_kwargs(links)
+    host = _host(tcps, links, **kw)
+    dev = _device(tcps, links, **kw)
+    np.testing.assert_array_equal(host.success, np.asarray(dev.success))
+    np.testing.assert_array_equal(host.reconnects, np.asarray(dev.reconnects))
+    np.testing.assert_allclose(
+        host.time, np.asarray(dev.time, np.float64), rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        host.bytes_acked, np.asarray(dev.bytes_acked, np.float64), rtol=1e-4
+    )
+
+
+def test_degenerate_ragged_grid_exact_parity():
+    """Unequal cohort widths: same padding/mask contract as the host."""
+    tcps = [DEFAULT, TUNED_EDGE]
+    links = [[LAB] * 5, [LAB.replace(delay=0.3)] * 3]
+    kw = dict(
+        update_bytes=np.full(2, UPD, np.int64),
+        download_bytes=np.full(2, UPD, np.int64),
+        local_train_times=[np.full(5, TT), np.full(3, TT)],
+        connected=[np.zeros(5, bool), np.zeros(3, bool)],
+    )
+    host = _host(tcps, links, **kw)
+    dev = _device(tcps, links, **kw)
+    np.testing.assert_array_equal(host.mask, dev.mask)
+    np.testing.assert_array_equal(host.success, np.asarray(dev.success))
+    np.testing.assert_array_equal(host.reconnects, np.asarray(dev.reconnects))
+    np.testing.assert_allclose(
+        host.time, np.asarray(dev.time, np.float64), rtol=1e-4
+    )
+
+
+def test_scenario_bytes_device_reduction():
+    """scenario_bytes is the on-device segment-sum of delivered wire
+    bytes: row-sum consistency, and on a fully-delivering degenerate
+    scenario exactly C * (up + down)."""
+    C = 8
+    tcps = [DEFAULT, DEFAULT]
+    links = [[LAB] * C, [LAB.replace(delay=8.0)] * C]  # alive / dead
+    kw = _round_kwargs(links)
+    dev = _device(tcps, links, **kw)
+    sb = np.asarray(dev.scenario_bytes, np.float64)
+    np.testing.assert_allclose(
+        sb, np.asarray(dev.bytes_acked, np.float64).sum(axis=1), rtol=1e-6
+    )
+    assert sb[0] == pytest.approx(C * 2.0 * UPD)
+    assert sb[1] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# distributional parity: stochastic paths sample different streams by design
+# ---------------------------------------------------------------------------
+
+
+def _pooled_rates(tcps, links, kw, rounds):
+    """Per-scenario delivery rates pooled over ``rounds`` independent
+    rounds, host and device."""
+    h = np.stack([
+        _host(tcps, links, rnd=r, **kw).success for r in range(rounds)
+    ])
+    d = np.stack([
+        np.asarray(_device(tcps, links, rnd=r, **kw).success)
+        for r in range(rounds)
+    ])
+    S = len(tcps)
+    return (
+        h.transpose(1, 0, 2).reshape(S, -1).mean(axis=1),
+        d.transpose(1, 0, 2).reshape(S, -1).mean(axis=1),
+    )
+
+
+def test_delivery_rates_match_host_on_fig4_grid():
+    """Fig-4 loss ladder x {DEFAULT, BIG_BUFFER}: per-scenario delivery
+    rates agree within a 4-sigma binomial envelope of the pooled rate."""
+    C, rounds = 96, 2
+    losses = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.55, 0.6]
+    tcps, links = [], []
+    for tcp in (DEFAULT, BIG_BUFFER):
+        for loss in losses:
+            tcps.append(tcp)
+            links.append([LAB.replace(loss=loss)] * C)
+    kw = _round_kwargs(links)
+    h_rate, d_rate = _pooled_rates(tcps, links, kw, rounds)
+    n = C * rounds
+    pooled = (h_rate + d_rate) / 2.0
+    sigma = np.sqrt(np.maximum(pooled * (1.0 - pooled), 1e-4) * 2.0 / n)
+    assert np.all(np.abs(h_rate - d_rate) <= 4.0 * sigma + 0.01), (
+        h_rate, d_rate
+    )
+
+
+def test_clock_quantiles_match_host_on_fig3_grid():
+    """Fig-3 delay ladder (deliverable range) x {DEFAULT, TUNED_EDGE}:
+    median delivered round clocks within 20% of the host oracle, plus a
+    jittered-link scenario so the sqrt(2)-normal RTT reformulation is on
+    the tested path."""
+    C = 96
+    tcps, links = [], []
+    for tcp in (DEFAULT, TUNED_EDGE):
+        for delay in (0.0, 0.1, 0.3, 1.0, 2.0):
+            tcps.append(tcp)
+            links.append([LAB.replace(delay=delay, loss=0.05)] * C)
+    tcps.append(DEFAULT)
+    links.append([LAB.replace(delay=0.2, jitter=0.05, loss=0.1)] * C)
+    kw = _round_kwargs(links)
+    host = _host(tcps, links, **kw)
+    dev = _device(tcps, links, **kw)
+    d_succ = np.asarray(dev.success)
+    d_time = np.asarray(dev.time, np.float64)
+    for s in range(len(tcps)):
+        hm, dm = host.success[s], d_succ[s]
+        assert hm.mean() > 0.5 and dm.mean() > 0.5, s  # deliverable range
+        qh = float(np.median(host.time[s][hm]))
+        qd = float(np.median(d_time[s][dm]))
+        assert abs(qh - qd) <= 0.20 * qh, (s, qh, qd)
+
+
+# ---------------------------------------------------------------------------
+# counter-based streams
+# ---------------------------------------------------------------------------
+
+
+def test_device_plane_deterministic_in_key():
+    C = 24
+    tcps = [DEFAULT, BIG_BUFFER]
+    links = [[LAB.replace(loss=0.2)] * C, [LAB.replace(loss=0.4)] * C]
+    kw = _round_kwargs(links)
+    a = _device(tcps, links, rnd=3, **kw)
+    b = _device(tcps, links, rnd=3, **kw)
+    np.testing.assert_array_equal(np.asarray(a.success), np.asarray(b.success))
+    np.testing.assert_array_equal(np.asarray(a.time), np.asarray(b.time))
+    np.testing.assert_array_equal(
+        np.asarray(a.reconnects), np.asarray(b.reconnects)
+    )
+    # a different round index folds a different stream
+    c = _device(tcps, links, rnd=4, **kw)
+    assert not (
+        np.array_equal(np.asarray(a.success), np.asarray(c.success))
+        and np.array_equal(np.asarray(a.time), np.asarray(c.time))
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernels: the device-side per-scenario reduction
+# ---------------------------------------------------------------------------
+
+
+def test_segment_sum_matches_ref():
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import segment_sum
+    from repro.kernels.ref import segment_sum_ref
+
+    rng = np.random.default_rng(7)
+    vals = rng.normal(size=64).astype(np.float32)
+    ids = rng.integers(0, 9, size=64)
+    got = segment_sum(jnp.asarray(vals), jnp.asarray(ids), num_segments=9)
+    ref = segment_sum_ref(jnp.asarray(vals), jnp.asarray(ids), 9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+    expect = np.zeros(9, np.float64)
+    np.add.at(expect, ids, vals.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(got, np.float64), expect, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ServerConfig / grid-engine wiring
+# ---------------------------------------------------------------------------
+
+
+def test_transport_backend_validation():
+    from repro.core import ServerConfig
+
+    with pytest.raises(ValueError):
+        ServerConfig(transport_backend="cuda")
+    with pytest.raises(ValueError):
+        ServerConfig(transport_backend="device", stochastic=False)
+    with pytest.raises(ValueError):
+        ServerConfig(transport_backend="device", stochastic=True, batched=False)
+    # the valid combination constructs (split-stream implication is a
+    # FederatedServer property, exercised by the grid tests below)
+    ServerConfig(transport_backend="device", stochastic=True, batched=True)
+
+
+@pytest.fixture(scope="module")
+def small_fl():
+    from repro.core import EdgeClient, mnist_cnn_task
+    from repro.data import make_federated_mnist, synthetic_mnist
+
+    task = mnist_cnn_task()
+    shards = make_federated_mnist(4, 48, seed=0)
+    eval_data = synthetic_mnist(120, seed=77)
+    return task, shards, eval_data
+
+
+def _points(shards, backends):
+    from repro.chaos import ChaosSchedule
+    from repro.core import EdgeClient, GridPoint, ServerConfig, fedavg
+
+    pts = []
+    for backend in backends:
+        clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+        pts.append(
+            GridPoint(
+                clients,
+                fedavg(min_fit=0.5),
+                DEFAULT,
+                ChaosSchedule(LAB.replace(loss=0.05)),
+                ServerConfig(
+                    rounds=2, local_steps=1, seed=0, batched=True,
+                    stochastic=True, transport_backend=backend,
+                ),
+            )
+        )
+    return pts
+
+
+def test_grid_fused_partitions_by_backend(small_fl):
+    """Mixed host/device grid under transport="fused": one device plane
+    dispatch per round for the device points, host points on the numpy
+    plane, every point completing."""
+    from repro.core import run_fl_grid
+
+    task, shards, eval_data = small_fl
+    res = run_fl_grid(
+        task,
+        _points(shards, ["device", "device", "host"]),
+        eval_data=eval_data,
+        transport="fused",
+    )
+    assert res.stats.transport_device_dispatches == 2  # one per round
+    for h in res.histories:
+        assert h.summary()["completed_rounds"] == 2
+
+
+def test_grid_parity_mode_reproduces_device_per_point(small_fl):
+    """Parity mode's contract is bitwise per-point reproduction; a
+    device-backend point's reference is its own device stream, so it is
+    excluded from the host hoist and must match a solo run exactly."""
+    from repro.core import FederatedServer, run_fl_grid
+
+    task, shards, eval_data = small_fl
+    p = _points(shards, ["device"])[0]
+    ref = FederatedServer(
+        task, p.clients, p.strategy, tcp=p.tcp, chaos=p.chaos,
+        config=p.config, eval_data=eval_data,
+    ).run().summary()
+    res = run_fl_grid(
+        task, _points(shards, ["device"]), eval_data=eval_data,
+        transport="parity",
+    )
+    assert res.stats.transport_device_dispatches == 0
+    got = res.histories[0].summary()
+    for k in ref:
+        assert ref[k] == got[k] or (ref[k] != ref[k] and got[k] != got[k]), k
