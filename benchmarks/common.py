@@ -36,7 +36,7 @@ from repro.core import (
     run_fl_grid,
 )
 from repro.data import make_federated_mnist, synthetic_mnist
-from repro.transport import DEFAULT, LAB, LinkProfile, TcpParams
+from repro.transport import DEFAULT, LAB, LinkProfile, RetryPolicy, TcpParams
 
 N_CLIENTS = 10
 ROUNDS = 8
@@ -129,6 +129,7 @@ def _make_point(
     rng_streams: str = "single",
     engine: str = "default",
     transport_backend: str = "host",
+    retry: Optional[RetryPolicy] = None,
 ) -> GridPoint:
     # data_seed decouples shard contents from the RNG-stream seed: grids
     # with spawned per-point seeds keep ONE shared shard set (dataset
@@ -143,7 +144,7 @@ def _make_point(
         config=ServerConfig(
             rounds=rounds, local_steps=local_steps, seed=seed, batched=batched,
             stochastic=stochastic, rng_streams=rng_streams, engine=engine,
-            transport_backend=transport_backend,
+            transport_backend=transport_backend, retry=retry,
         ),
         compressor=_shared_compressor(compressor),
     )

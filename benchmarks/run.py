@@ -33,6 +33,7 @@ def main() -> None:
         fig5_client_failure,
         fig678_tcp_params,
         kernel_bench,
+        resilience_bench,
         round_engine_bench,
         sweep_bench,
         table3_boundaries,
@@ -54,6 +55,7 @@ def main() -> None:
         ("sweep_bench", sweep_bench.main),
         ("compress_bench", compress_bench.main),
         ("transport_plane_bench", transport_plane_bench.main),
+        ("resilience_bench", resilience_bench.main),
     ]
 
     if only is not None:

@@ -5,6 +5,7 @@ from repro.chaos.schedule import (
     internet_shutdown,
     netem,
     partition,
+    server_restart,
 )
 
 __all__ = [
@@ -14,4 +15,5 @@ __all__ = [
     "partition",
     "internet_shutdown",
     "client_failure_schedule",
+    "server_restart",
 ]

@@ -10,6 +10,10 @@ simulator and the FL round engine:
 - ``internet_shutdown``— all clients partitioned (the paper's §II scenario)
 - ``client_failure_schedule`` — kill a sampled fraction of clients per span
   (Chaos-Mesh pod-kill equivalent; deterministic per seed)
+- ``server_restart(t)``— the SERVER process dies at t: the round in flight
+  is lost (state reverts to the round boundary, the in-memory equivalent
+  of resuming from a ``checkpoint_dir`` checkpoint), every client
+  connection drops, and training resumes after ``downtime`` seconds
 
 ``ChaosSchedule.link_at(t, client)`` resolves the effective LinkProfile and
 ``alive(t, client)`` resolves pod liveness at simulated time t.
@@ -29,9 +33,10 @@ from repro.transport.link import LinkProfile
 class ChaosEvent:
     t_start: float
     t_end: float  # inf = until the end of the experiment
-    kind: str  # "netem" | "partition" | "pod_kill"
+    kind: str  # "netem" | "partition" | "pod_kill" | "server_restart"
     clients: Optional[Tuple[int, ...]] = None  # None = all clients
     link_override: Optional[Dict] = None  # fields to replace on the base link
+    downtime: float = 0.0  # server_restart only: seconds the server is down
 
     def active(self, t: float) -> bool:
         return self.t_start <= t < self.t_end
@@ -92,6 +97,18 @@ def client_failure_schedule(
     return ChaosEvent(t_start, t_end, "pod_kill", victims, None)
 
 
+def server_restart(t: float, *, downtime: float = 0.0) -> ChaosEvent:
+    """Simulated server crash at time t (strictly after the run starts).
+
+    The FL engine treats a crash inside a round's span as losing that
+    round: in-flight contributions are discarded, global state stays at
+    the round boundary (exactly what a ``run_fl_grid(checkpoint_dir=...)``
+    resume would restore), all clients disconnect, and the clock jumps to
+    ``t + downtime``. ``link_at``/``alive`` ignore this kind — it is a
+    server-side fault, not a link impairment."""
+    return ChaosEvent(t, t, "server_restart", None, None, downtime)
+
+
 @dataclass
 class ChaosSchedule:
     base_link: LinkProfile
@@ -120,3 +137,15 @@ class ChaosSchedule:
 
     def failed_fraction(self, t: float, n_clients: int) -> float:
         return sum(0 if self.alive(t, c) else 1 for c in range(n_clients)) / max(n_clients, 1)
+
+    def server_restart_in(self, t0: float, t1: float) -> Optional[Tuple[float, float]]:
+        """Earliest server_restart event with t0 < t_start <= t1, as
+        (crash_time, downtime); None when the span is crash-free. Round
+        spans tile the timeline half-open on the left, so each crash event
+        lands in exactly one round."""
+        best = None
+        for ev in self.events:
+            if ev.kind == "server_restart" and t0 < ev.t_start <= t1:
+                if best is None or ev.t_start < best[0]:
+                    best = (ev.t_start, ev.downtime)
+        return best

@@ -50,17 +50,23 @@ def save_tree(directory: str, tree, *, metadata: Optional[Dict] = None) -> str:
 
     def _np(v):
         a = np.asarray(v)
-        if a.dtype.kind not in "fiub":  # npz can't round-trip bf16 & friends
-            a = a.astype(np.float32)
-        elif a.dtype == np.dtype("float16") or str(a.dtype) == "bfloat16":
-            a = a.astype(np.float32)
-        return a
+        orig = str(a.dtype)
+        if orig == "bfloat16":
+            # npz can't hold bf16: store the raw bits as uint16; the
+            # recorded original dtype lets load_tree view them back
+            # bit-exactly (no widening round-trip)
+            return a.view(np.uint16), orig
+        if a.dtype.kind not in "fiub":  # exotic dtypes npz can't round-trip
+            return a.astype(np.float32), orig
+        return a, orig  # f16 and every native numpy dtype save as-is
 
-    arrays = {k: _np(v) for k, v in flat.items()}
+    converted = {k: _np(v) for k, v in flat.items()}
+    arrays = {k: a for k, (a, _) in converted.items()}
     manifest = {
         "keys": list(arrays.keys()),
         "shapes": {k: list(a.shape) for k, a in arrays.items()},
-        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},  # as stored
+        "orig_dtypes": {k: o for k, (_, o) in converted.items()},
         "metadata": metadata or {},
     }
     parent = os.path.dirname(directory.rstrip("/")) or "."
@@ -93,6 +99,16 @@ def load_tree(directory: str, template) -> Tuple[Any, Dict]:
         arr = data[key]
         if tuple(arr.shape) != tuple(tmpl.shape):
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs template {tmpl.shape}")
+        orig = manifest.get("orig_dtypes", {}).get(key)
+        if orig is not None and orig != str(arr.dtype):
+            if orig == "bfloat16":
+                import ml_dtypes
+
+                arr = arr.view(ml_dtypes.bfloat16)  # bit-exact restore
+            else:
+                import jax.numpy as jnp
+
+                arr = np.asarray(jnp.asarray(arr).astype(orig))
         if hasattr(tmpl, "dtype") and arr.dtype != tmpl.dtype:
             # cast through jnp (handles bf16 and other ml_dtypes)
             import jax.numpy as jnp

@@ -50,7 +50,10 @@ reference 1-3 distinct anchors across a 64-row plane.
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import json
+import os
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -59,12 +62,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.chaos import ChaosSchedule
+from repro.checkpoint.store import CheckpointManager, load_tree
 from repro.core.client import EdgeClient, LocalTask
 from repro.core.server import (
     _GRID_STREAM,
     FederatedServer,
     History,
     PendingRound,
+    RoundRecord,
     ServerConfig,
     derive_rng,
 )
@@ -107,6 +112,12 @@ class GridStats:
     transport_dispatches: int = 0  # hoisted host sim_grid_round calls
     transport_device_dispatches: int = 0  # hoisted device-plane programs
     transport_rows: int = 0  # (point, client) rows sampled through them
+    # fault-domain observability: points retired by quarantine, rounds
+    # lost to server_restart chaos events, and crash-consistency telemetry
+    quarantined: int = 0  # points ending with status "diverged"
+    server_restarts: int = 0  # rounds lost to server_restart events
+    checkpoints_saved: int = 0
+    resumed_round: int = 0  # first round this run executed (0 = fresh)
 
 
 @dataclass
@@ -183,6 +194,9 @@ def _plane_transport(
         ]
         ltt = [pr.local_times for _, pr in sub]
         conn = [pr.connected for _, pr in sub]
+        # per-scenario retry ladder: each point's own policy (deadline-cap
+        # resolved), exactly what its standalone transport would apply
+        retry = [servers[i]._effective_retry() for i, _ in sub]
         if backend == "device":
             from repro.transport.plane import (
                 sim_grid_round_device,
@@ -199,6 +213,7 @@ def _plane_transport(
                 # _GRID_STREAM on the device key family: decorrelated from
                 # every point's private per-round device stream by tag
                 key=transport_plane_key(transport_seed, _GRID_STREAM, rnd),
+                retry=retry,
             )
             if stats is not None:
                 stats.transport_device_dispatches += 1
@@ -222,6 +237,7 @@ def _plane_transport(
             download_bytes=down,
             local_train_times=ltt,
             connected=conn,
+            retry=retry,
             **rng_kw,
         )
         if stats is not None:
@@ -244,6 +260,36 @@ def _plane_transport(
     return res
 
 
+def _jsonable(v):
+    """numpy scalars -> python, tuples/namedtuples -> lists, recursively
+    (round-boundary metadata must survive a JSON round-trip bit-exactly:
+    floats are IEEE-exact through json, ints are arbitrary-precision)."""
+    if isinstance(v, np.floating):
+        return float(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+def _check_checkpointable(servers: List[FederatedServer]) -> None:
+    for i, srv in enumerate(servers):
+        comp = srv.compressor
+        if comp.name != "none" and not comp.fingerprint:
+            raise ValueError(
+                f"checkpoint_dir: point {i} uses stateful compressor "
+                f"{comp.name!r} (empty fingerprint) whose Python-side state "
+                "the round-boundary checkpoint cannot capture; use a "
+                "deterministic (fingerprinted) compressor or disable "
+                "checkpointing"
+            )
+
+
 def run_fl_grid(
     task: LocalTask,
     points: Sequence[GridPoint],
@@ -253,6 +299,10 @@ def run_fl_grid(
     max_plane_rows: int = 64,
     transport: str = "per_point",
     transport_seed: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 3,
+    stop_after_round: Optional[int] = None,
 ) -> GridResult:
     """Run every sweep point of a characterization grid in lockstep.
 
@@ -281,7 +331,26 @@ def run_fl_grid(
 
     Ineligible points fall back to "per_point" transparently in both
     hoisted modes. ``GridStats.transport_dispatches`` counts hoisted
-    ``sim_grid_round`` calls; ``transport_rows`` the rows they sampled."""
+    ``sim_grid_round`` calls; ``transport_rows`` the rows they sampled.
+
+    **Crash consistency.** ``checkpoint_dir`` makes the sweep resumable:
+    every ``checkpoint_every`` rounds the driver persists the full
+    round-boundary state — per-point global params, residual planes,
+    server-optimizer state (arrays, through the atomic
+    ``repro.checkpoint.store`` protocol), plus History/GridStats, RNG
+    generator states, client connection/participation state, and the
+    provenance keys — and a re-invocation with the same ``checkpoint_dir``
+    picks up at the first unfinished round, producing histories bitwise
+    identical to the uninterrupted run (everything the engine consumes is
+    round-granular; split-stream points re-derive their streams per round
+    and single-stream points restore exact generator state). A checkpoint
+    written by a different grid (points/seeds/rounds/transport mismatch)
+    raises instead of silently mixing sweeps. Stateful compressors (randk's
+    rotating counter) are rejected up front; the sequential per-client
+    residual path is rejected at save time. ``stop_after_round=k`` exits
+    cleanly once round k has completed (and checkpointed) — the
+    deterministic kill-switch crash/resume tests and benches are built on.
+    """
     if transport not in ("per_point", "parity", "fused"):
         raise ValueError(f"unknown transport mode {transport!r}")
     stats = GridStats()
@@ -356,7 +425,7 @@ def run_fl_grid(
             return False
         return srv.config.stochastic and srv.config.batched and srv.split_streams
 
-    for rnd in range(max_rounds):
+    def _round(rnd: int) -> None:
         # --- per-point pre phase: selection on the point's own RNG stream;
         # transport inline (per_point) or deferred to the shared plane ------
         jobs = []  # (point_idx, FitJob)
@@ -398,7 +467,7 @@ def run_fl_grid(
             plans = task.plan_fit(job.clients, job.steps, srv.rng)
             pending.append((i, job, plans))
         if not pending:
-            continue
+            return
         stats.rounds += 1
 
         # --- row table: coalesce identical rows across points ---------------
@@ -485,6 +554,25 @@ def run_fl_grid(
             stacked, weights, per_metrics = _gather_rows(
                 groups[gkey]["planes"], max_plane_rows, idxs
             )
+            # fault domain first, BEFORE the shared compression pass can
+            # mutate this point's residual plane or provenance: a server
+            # crash inside the round span loses the round (params and
+            # residuals stay at the round boundary — params_keys/res_keys
+            # unchanged); a quarantine trigger retires only this row of
+            # the sweep, leaving every other point's dispatch untouched
+            # (row independence: rows never reduce across points)
+            round_time = min(max(job.arrivals), srv.config.round_deadline)
+            crash = srv.chaos.server_restart_in(
+                job.record.t_start, job.record.t_start + round_time
+            )
+            if crash is not None:
+                srv._abort_round_server_restart(job.record, crash)
+                continue
+            if srv.config.quarantine:
+                cause = srv._divergence_cause(stacked, None, per_metrics)
+                if cause is not None:
+                    srv._quarantine_round(job, cause)
+                    continue
             comp = srv.compressor
             # a compressor is provenance-shareable when its transform is a
             # deterministic function of (delta, residual) — fingerprinted
@@ -550,7 +638,165 @@ def run_fl_grid(
                 res_keys[i] = intern(("opaque", next(nonce)))
             srv.finish_round(
                 job, stacked, None, weights, per_metrics,
-                precompressed=precompressed,
+                precompressed=precompressed, fault_checked=True,
             )
 
+    # --- crash consistency: round-boundary checkpoint save/restore --------
+    fingerprint = {
+        "n_points": len(points),
+        "seeds": [int(p.config.seed) for p in points],
+        "rounds": [int(p.config.rounds) for p in points],
+        "names": [p.name for p in points],
+        "transport": transport,
+        "transport_seed": int(transport_seed),
+        "coalesce": bool(coalesce),
+    }
+
+    def _save_checkpoint(mgr: CheckpointManager, next_round: int) -> None:
+        arrays: Dict[str, Any] = {}
+        meta_points = []
+        for i, srv in enumerate(servers):
+            if any(c.residual is not None for c in srv.clients):
+                raise ValueError(
+                    f"checkpoint_dir: point {i} accumulated per-client "
+                    "sequential residual state (the non-plane compression "
+                    "fallback), which round-boundary checkpoints do not "
+                    "cover; use a plane-capable compressor"
+                )
+            node: Dict[str, Any] = {"params": srv.global_params}
+            if srv._residual_plane is not None:
+                node["residual"] = srv._residual_plane
+            if srv.strategy.server_state is not None:
+                node["server_state"] = srv.strategy.server_state
+            arrays[f"p{i:04d}"] = node
+            h = srv.history
+            meta_points.append({
+                "sim_time": float(srv.sim_time),
+                "consecutive_failures": int(srv.consecutive_failures),
+                "terminated": bool(srv.terminated),
+                "status": h.status,
+                "cause": h.cause,
+                # generator states matter only for single-stream points
+                # (split streams re-derive per round) but are cheap to
+                # carry for all of them
+                "rng_state": _jsonable(srv.rng.bit_generator.state),
+                "transport_rng_state": (
+                    _jsonable(srv._transport_rng.bit_generator.state)
+                    if srv._transport_rng is not None else None
+                ),
+                "clients": [
+                    {
+                        "connected": bool(c.connected),
+                        "rounds_participated": int(c.rounds_participated),
+                        "bytes_sent": int(c.bytes_sent),
+                    }
+                    for c in srv.clients
+                ],
+                "rounds": [_jsonable(dataclasses.asdict(r)) for r in h.rounds],
+                "eval_metrics": [_jsonable(m) for m in h.eval_metrics],
+                # provenance keys: only the equivalence classes matter, so
+                # the saved ints round-trip as opaque interned tokens
+                "params_key": int(params_keys[i]),
+                "res_key": int(res_keys[i]),
+                "has_residual": srv._residual_plane is not None,
+                "has_server_state": srv.strategy.server_state is not None,
+            })
+        mgr.save(
+            next_round,
+            arrays,
+            metadata={
+                "next_round": int(next_round),
+                "grid": fingerprint,
+                "stats": _jsonable(dataclasses.asdict(stats)),
+                "points": meta_points,
+            },
+        )
+
+    def _restore_checkpoint(mgr: CheckpointManager) -> int:
+        step = mgr.latest_step()
+        if step is None:
+            return 0
+        with open(os.path.join(mgr._step_dir(step), "manifest.json")) as f:
+            meta = json.load(f)["metadata"]
+        if meta["grid"] != fingerprint:
+            raise ValueError(
+                "checkpoint_dir holds a checkpoint from a DIFFERENT grid "
+                f"(saved {meta['grid']!r} vs this run {fingerprint!r}); "
+                "refusing to mix sweeps"
+            )
+        # template mirrors _save_checkpoint's tree for the fresh servers
+        template: Dict[str, Any] = {}
+        for i, srv in enumerate(servers):
+            mp = meta["points"][i]
+            node: Dict[str, Any] = {"params": srv.global_params}
+            if mp["has_residual"]:
+                node["residual"] = srv._ensure_residual_plane()
+            if mp["has_server_state"]:
+                node["server_state"] = srv.strategy.server_opt.init(
+                    srv.global_params
+                )
+            template[f"p{i:04d}"] = node
+        tree, _ = load_tree(mgr._step_dir(step), template)
+        for i, srv in enumerate(servers):
+            mp = meta["points"][i]
+            node = tree[f"p{i:04d}"]
+            srv.global_params = jax.tree.map(jnp.asarray, node["params"])
+            if mp["has_residual"]:
+                srv._residual_plane = jax.tree.map(
+                    jnp.asarray, node["residual"]
+                )
+            if mp["has_server_state"]:
+                srv.strategy.server_state = jax.tree.map(
+                    jnp.asarray, node["server_state"]
+                )
+            srv.sim_time = float(mp["sim_time"])
+            srv.consecutive_failures = int(mp["consecutive_failures"])
+            srv.terminated = bool(mp["terminated"])
+            srv.history.status = mp["status"]
+            srv.history.cause = mp["cause"]
+            srv.history.rounds = [RoundRecord(**r) for r in mp["rounds"]]
+            srv.history.eval_metrics = [dict(m) for m in mp["eval_metrics"]]
+            srv.rng.bit_generator.state = mp["rng_state"]
+            if mp["transport_rng_state"] is not None:
+                srv._transport_rng = np.random.default_rng()
+                srv._transport_rng.bit_generator.state = mp["transport_rng_state"]
+            for c, cs in zip(srv.clients, mp["clients"]):
+                c.connected = bool(cs["connected"])
+                c.rounds_participated = int(cs["rounds_participated"])
+                c.bytes_sent = int(cs["bytes_sent"])
+            # equal saved keys across points => equal restored tokens, so
+            # trajectory sharing survives the resume; the eval cache is
+            # cold but recomputes identical values (evaluate is pure)
+            params_keys[i] = intern(("ckpt", mp["params_key"]))
+            res_keys[i] = intern(("ckpt-res", mp["res_key"]))
+        for k, v in meta["stats"].items():
+            if hasattr(stats, k):
+                setattr(stats, k, v)
+        return int(meta["next_round"])
+
+    mgr: Optional[CheckpointManager] = None
+    start_round = 0
+    if checkpoint_dir is not None:
+        _check_checkpointable(servers)
+        mgr = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+        start_round = _restore_checkpoint(mgr)
+    stats.resumed_round = start_round
+
+    end_round = (
+        max_rounds if stop_after_round is None
+        else min(max_rounds, stop_after_round)
+    )
+    for rnd in range(start_round, end_round):
+        _round(rnd)
+        if mgr is not None and (rnd + 1) % checkpoint_every == 0:
+            _save_checkpoint(mgr, rnd + 1)
+            stats.checkpoints_saved += 1
+
+    stats.quarantined = sum(
+        1 for s in servers if s.history.status == "diverged"
+    )
+    stats.server_restarts = sum(
+        1 for s in servers for r in s.history.rounds
+        if r.cause == "server_restart"
+    )
     return GridResult([s.history for s in servers], stats, servers)

@@ -46,6 +46,7 @@ from repro.core.client import EdgeClient, LocalTask
 from repro.core.strategy import Strategy
 from repro.transport import LinkProfile, TcpParams, client_round as analytic_round
 from repro.transport.des import sim_client_round, sim_cohort_round, sim_grid_round
+from repro.transport.params import RetryPolicy
 from repro.utils import tree_stack, tree_unstack
 
 
@@ -64,12 +65,21 @@ class RoundRecord:
     # the split-stream contract is asserted on: at a fixed seed this
     # sequence must not depend on which transport engine sampled the round
     selected_ids: List[int] = field(default_factory=list)
+    # failed rounds carry why: "no_live_quorum" | "quorum" |
+    # "server_restart" | a quarantine cause ("non_finite_loss" /
+    # "non_finite_delta"); empty for successful rounds
+    cause: str = ""
 
 
 @dataclass
 class History:
     rounds: List[RoundRecord] = field(default_factory=list)
     eval_metrics: List[Dict[str, float]] = field(default_factory=list)
+    # fault-domain outcome for the whole run: "healthy" until the point is
+    # quarantined ("diverged", non-finite loss/delta) or declared dead
+    # ("failed", max_consecutive_failures); ``cause`` carries the trigger
+    status: str = "healthy"
+    cause: str = ""
 
     @property
     def total_time(self) -> float:
@@ -94,6 +104,8 @@ class History:
             "mean_reconnects": float(
                 np.mean([r.reconnects for r in self.rounds]) if self.rounds else 0.0
             ),
+            "status": self.status,
+            "cause": self.cause,
         }
 
 
@@ -206,6 +218,21 @@ class ServerConfig:
     # exact on degenerate (loss=0, jitter=0) rows, distributional
     # elsewhere.
     transport_backend: str = "host"
+    # Application-level within-round retry (FedComm-style): failed clients
+    # re-attempt the whole round exchange under the policy's exponential
+    # backoff/jitter/budget, in both the host DES and the device plane
+    # (see repro.transport.params.RetryPolicy). The policy's deadline_cap
+    # is additionally capped at round_deadline. Stochastic engines only —
+    # the analytic model exposes the closed form via
+    # repro.transport.model.retry_round instead.
+    retry: Optional[RetryPolicy] = None
+    # Per-point quarantine: a round producing a non-finite client loss or
+    # a non-finite delta sum is REJECTED before compression/aggregation
+    # (global params and residual plane stay at the round boundary), the
+    # point terminates with History.status="diverged" + cause instead of
+    # poisoning downstream state or raising. Detection is read-only, so
+    # healthy runs are bitwise unaffected.
+    quarantine: bool = True
 
     def __post_init__(self):
         # typos here would silently select the legacy stream discipline
@@ -221,6 +248,13 @@ class ServerConfig:
                 "transport_backend='device' requires stochastic=True and "
                 "batched=True (the device plane is a Monte-Carlo cohort "
                 "sampler; there is no analytic or sequential device path)"
+            )
+        if self.retry is not None and not self.stochastic:
+            raise ValueError(
+                "retry= requires stochastic=True: the retry ladder is a "
+                "property of the event-granular engines (host DES / device "
+                "plane); for the analytic model use "
+                "repro.transport.model.retry_round"
             )
 
 
@@ -305,6 +339,17 @@ class FederatedServer:
         shared interleaved stream otherwise."""
         return self._transport_rng if self.split_streams else self.rng
 
+    def _effective_retry(self) -> Optional[RetryPolicy]:
+        """The configured RetryPolicy with its deadline cap resolved
+        against the server's round_deadline (re-attempts finishing past
+        the deadline could never deliver, so waiting them out is pure
+        clock waste); None when retry is off."""
+        r = self.config.retry
+        if r is None or r.max_retries <= 0:
+            return None
+        cap = min(r.deadline_cap, self.config.round_deadline)
+        return r if cap == r.deadline_cap else r.replace(deadline_cap=cap)
+
     # ------------------------------------------------------------------
     def _client_transport(
         self,
@@ -327,6 +372,7 @@ class FederatedServer:
                 rng=rng,
                 connected=client.connected,
                 download_bytes=download_bytes,
+                retry=self._effective_retry(),
             )
             return out.success, out.time, out.reconnects
         out = analytic_round(
@@ -378,6 +424,7 @@ class FederatedServer:
                     local_train_times=local_times[None],
                     connected=connected[None],
                     key=transport_plane_key(cfg.seed, _TRANSPORT_STREAM, pending.rnd),
+                    retry=self._effective_retry(),
                 )
                 return (
                     np.asarray(out.success)[0],
@@ -400,6 +447,7 @@ class FederatedServer:
                     local_train_times=local_times[None],
                     rng=rng,
                     connected=connected[None],
+                    retry=self._effective_retry(),
                 )
                 return out.success[0], out.time[0], out.reconnects[0].astype(float)
             out = sim_cohort_round(
@@ -410,6 +458,7 @@ class FederatedServer:
                 rng=rng,
                 connected=connected,
                 download_bytes=pending.download_bytes,
+                retry=self._effective_retry(),
             )
             return out.success, out.time, out.reconnects.astype(float)
         outs = [
@@ -434,14 +483,84 @@ class FederatedServer:
         return completed, times, np.array([o.reconnects for o in outs])
 
     # ------------------------------------------------------------------
-    def _fail_round(self, record: RoundRecord) -> None:
+    def _fail_round(self, record: RoundRecord, cause: str = "quorum") -> None:
         self.sim_time += self.config.round_deadline
+        record.cause = cause
+        crash = self.chaos.server_restart_in(record.t_start, self.sim_time)
+        if crash is not None:
+            # the server also died while waiting out this failed round:
+            # every client connection drops and the downtime extends the
+            # wait when it outlasts the deadline window
+            for c in self.clients:
+                c.connected = False
+            self.sim_time = max(self.sim_time, crash[0] + crash[1])
         record.t_end = self.sim_time
         record.failed_round = True
         self.history.rounds.append(record)
         self.consecutive_failures += 1
         if self.consecutive_failures >= self.config.max_consecutive_failures:
             self.terminated = True
+            self.history.status = "failed"
+            self.history.cause = "max_consecutive_failures"
+
+    def _abort_round_server_restart(self, record: RoundRecord, crash) -> None:
+        """A ``server_restart`` chaos event landed inside this round's
+        span: every in-flight contribution is lost, global params and the
+        residual plane stay at the round boundary (the in-memory
+        equivalent of resuming from the last ``checkpoint_dir``
+        checkpoint), all client connections drop (the crash kills them;
+        survivors re-handshake next round), and the clock jumps to
+        crash + downtime. Deterministic — no RNG is consumed — so engine
+        parity is preserved."""
+        t_crash, downtime = crash
+        record.failed_round = True
+        record.cause = "server_restart"
+        for c in self.clients:
+            c.connected = False
+        self.sim_time = t_crash + downtime
+        record.t_end = self.sim_time
+        self.history.rounds.append(record)
+        self.consecutive_failures += 1
+        if self.consecutive_failures >= self.config.max_consecutive_failures:
+            self.terminated = True
+            self.history.status = "failed"
+            self.history.cause = "max_consecutive_failures"
+
+    def _divergence_cause(self, stacked, deltas, per_metrics) -> Optional[str]:
+        """Quarantine trigger scan, read-only: a non-finite client loss
+        (free — metrics are already on the host) or a non-finite stacked/
+        listed delta sum (one fused device reduction; NaN/Inf propagate
+        through a plain sum). Returns the cause string or None."""
+        for m in per_metrics:
+            v = m.get("loss")
+            if v is not None and not math.isfinite(float(v)):
+                return "non_finite_loss"
+        tree = stacked if stacked is not None else deltas
+        leaves = jax.tree.leaves(tree) if tree is not None else []
+        if leaves:
+            import jax.numpy as jnp
+
+            total = float(sum(jnp.sum(leaf) for leaf in leaves))
+            if not math.isfinite(total):
+                return "non_finite_delta"
+        return None
+
+    def _quarantine_round(self, job: FitJob, cause: str) -> None:
+        """Reject the round's update and retire the point: params and the
+        residual plane stay at the round boundary (detection runs BEFORE
+        compression, so error feedback never ingests non-finite rows), the
+        round is recorded failed with its cause, and the server terminates
+        with status "diverged" instead of raising — in a grid, only this
+        row is lost."""
+        record = job.record
+        record.failed_round = True
+        record.cause = cause
+        self.sim_time += min(max(job.arrivals), self.config.round_deadline)
+        record.t_end = self.sim_time
+        self.history.rounds.append(record)
+        self.terminated = True
+        self.history.status = "diverged"
+        self.history.cause = cause
 
     def select_cohort(self, rnd: int) -> Optional[PendingRound]:
         """Pre-transport half of ``begin_round``: liveness, cohort
@@ -468,7 +587,7 @@ class FederatedServer:
         if len(live) < quorum:
             # Flower blocks until min_fit clients are available; account
             # the wait as a failed round of deadline length.
-            self._fail_round(record)
+            self._fail_round(record, cause="no_live_quorum")
             return None
 
         k = max(quorum, int(round(cfg.clients_per_round * len(live))))
@@ -543,7 +662,7 @@ class FederatedServer:
 
         record.delivered = len(deliveries)
         if len(deliveries) < quorum:
-            self._fail_round(record)
+            self._fail_round(record, cause="quorum")
             return None
         self.consecutive_failures = 0
         return FitJob(
@@ -616,7 +735,7 @@ class FederatedServer:
 
     def finish_round(
         self, job: FitJob, stacked, deltas, weights, per_metrics,
-        precompressed: bool = False,
+        precompressed: bool = False, fault_checked: bool = False,
     ) -> None:
         """Compression, bookkeeping, aggregation, clock advance, eval.
 
@@ -636,6 +755,26 @@ class FederatedServer:
         record = job.record
         dclients = job.clients
         arrivals = job.arrivals
+
+        # fault domain, checked before any state mutates: a server crash
+        # inside the round span loses the round outright; a quarantine
+        # trigger (non-finite loss/delta) rejects it before compression so
+        # the residual plane never ingests poison. ``fault_checked=True``
+        # means the caller (the grid driver, which must check before its
+        # SHARED compression pass) already ran both checks.
+        round_time = min(max(arrivals), cfg.round_deadline)
+        if not fault_checked:
+            crash = self.chaos.server_restart_in(
+                record.t_start, record.t_start + round_time
+            )
+            if crash is not None:
+                self._abort_round_server_restart(record, crash)
+                return
+            if cfg.quarantine:
+                cause = self._divergence_cause(stacked, deltas, per_metrics)
+                if cause is not None:
+                    self._quarantine_round(job, cause)
+                    return
 
         # compression: the plane path keeps the whole cohort stacked —
         # error-feedback residuals live in a [N_clients, ...] device plane
@@ -697,8 +836,7 @@ class FederatedServer:
                 self.global_params, deltas, weights, rnd
             )
 
-        round_time = max(arrivals)
-        self.sim_time += min(round_time, cfg.round_deadline)
+        self.sim_time += round_time
         record.t_end = self.sim_time
         self.history.rounds.append(record)
 

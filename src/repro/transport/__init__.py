@@ -22,6 +22,7 @@ from repro.transport.model import (
     goodput_bps,
     handshake,
     idle_phase,
+    retry_round,
     transfer,
 )
 from repro.transport.des import (
@@ -32,7 +33,13 @@ from repro.transport.des import (
     sim_cohort_round,
     sim_grid_round,
 )
-from repro.transport.params import BIG_BUFFER, DEFAULT, TUNED_EDGE, TcpParams
+from repro.transport.params import (
+    BIG_BUFFER,
+    DEFAULT,
+    TUNED_EDGE,
+    RetryPolicy,
+    TcpParams,
+)
 
 
 def __getattr__(name):
@@ -57,6 +64,7 @@ __all__ = [
     "ASIA",
     "AUSTRALIA",
     "TcpParams",
+    "RetryPolicy",
     "DEFAULT",
     "TUNED_EDGE",
     "BIG_BUFFER",
@@ -64,6 +72,7 @@ __all__ = [
     "idle_phase",
     "transfer",
     "client_round",
+    "retry_round",
     "classify",
     "goodput_bps",
     "effective_rtt",

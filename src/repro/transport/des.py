@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.transport.link import LinkProfile
-from repro.transport.params import TcpParams
+from repro.transport.params import RetryPolicy, TcpParams
 
 
 @dataclass
@@ -181,8 +181,69 @@ def sim_client_round(
     rng: np.random.Generator,
     connected: bool = True,
     download_bytes: Optional[int] = None,
+    retry: Optional[RetryPolicy] = None,
 ) -> SimOutcome:
-    """One full FL client round, event-granular."""
+    """One full FL client round, event-granular.
+
+    With ``retry=RetryPolicy(...)`` a failed round is re-attempted from
+    scratch (fresh handshake + download + train window + upload) after the
+    policy's backoff, until success, the retry budget, or the policy's
+    ``deadline_cap`` on the accumulated round clock. Backoff consumes one
+    uniform draw per re-attempt only when ``retry.jitter > 0``.
+    """
+    out = _sim_client_attempt(
+        tcp,
+        link,
+        update_bytes=update_bytes,
+        local_train_time=local_train_time,
+        rng=rng,
+        connected=connected,
+        download_bytes=download_bytes,
+    )
+    if retry is None:
+        return out
+    attempt = 1
+    while (
+        not out.success
+        and attempt <= retry.max_retries
+        and out.time < retry.deadline_cap
+    ):
+        wait = retry.backoff(attempt)
+        if retry.jitter > 0:
+            wait *= 1.0 + retry.jitter * rng.random()
+        out.events.append(Event(out.time + wait, "RETRY", f"re-attempt {attempt}"))
+        a = _sim_client_attempt(
+            tcp,
+            link,
+            update_bytes=update_bytes,
+            local_train_time=local_train_time,
+            rng=rng,
+            connected=False,
+            download_bytes=download_bytes,
+        )
+        base = out.time + wait
+        out.events += [Event(e.t + base, e.kind, e.detail) for e in a.events]
+        out = SimOutcome(
+            a.success,
+            base + a.time,
+            out.events,
+            out.reconnects + a.reconnects,
+            a.bytes_acked,
+        )
+        attempt += 1
+    return out
+
+
+def _sim_client_attempt(
+    tcp: TcpParams,
+    link: LinkProfile,
+    *,
+    update_bytes: int,
+    local_train_time: float,
+    rng: np.random.Generator,
+    connected: bool,
+    download_bytes: Optional[int],
+) -> SimOutcome:
     download_bytes = update_bytes if download_bytes is None else download_bytes
     t = 0.0
     events: List[Event] = []
@@ -368,6 +429,43 @@ class _TcpArrays:
             self.retries2[idx], self.rmem[idx], self.sack[idx],
             self.initial_rto[idx], self.max_rto[idx], self.mss[idx],
             self.window_bytes[idx],
+        )
+
+
+_NO_RETRY = RetryPolicy(max_retries=0)
+
+
+@dataclass
+class _RetryArrays:
+    """Per-row RetryPolicy constants; ``None`` rows become zero-retry."""
+
+    max_retries: np.ndarray  # int
+    base: np.ndarray
+    factor: np.ndarray
+    max_backoff: np.ndarray
+    jitter: np.ndarray
+    deadline_cap: np.ndarray
+
+    @classmethod
+    def from_policies(cls, policies: Sequence[Optional[RetryPolicy]]) -> "_RetryArrays":
+        ps = [p if p is not None else _NO_RETRY for p in policies]
+        return cls(
+            max_retries=np.array([p.max_retries for p in ps], np.int64),
+            base=np.array([p.base_backoff for p in ps], float),
+            factor=np.array([p.backoff_factor for p in ps], float),
+            max_backoff=np.array([p.max_backoff for p in ps], float),
+            jitter=np.array([p.jitter for p in ps], float),
+            deadline_cap=np.array([p.deadline_cap for p in ps], float),
+        )
+
+    @classmethod
+    def broadcast(cls, policy: Optional[RetryPolicy], k: int) -> "_RetryArrays":
+        return cls.from_policies([policy]).take(np.zeros(k, np.int64))
+
+    def take(self, idx: np.ndarray) -> "_RetryArrays":
+        return _RetryArrays(
+            self.max_retries[idx], self.base[idx], self.factor[idx],
+            self.max_backoff[idx], self.jitter[idx], self.deadline_cap[idx],
         )
 
 
@@ -557,11 +655,82 @@ def _sim_rows(
     local_train_times: np.ndarray,
     rng: np.random.Generator,
     connected: np.ndarray,
+    retry=None,
 ):
-    """One FL round for a plane of rows with batched draws: handshake-if-
-    needed -> download -> idle (keepalive/middlebox) -> reconnect-if-dead ->
-    upload, each stage sampled for every row at once. Returns
-    (success, time, reconnects, bytes_acked, counts)."""
+    """One FL round for a plane of rows with batched draws, plus the
+    optional application-level retry ladder.
+
+    ``retry`` is None, a RetryPolicy (broadcast to all rows), or a
+    ``_RetryArrays`` with per-row policies. Failed rows re-run the whole
+    attempt pipeline (``_sim_rows_once``, reconnecting from scratch) after
+    their backoff wait; jitter rows consume one uniform draw per
+    re-attempt, jitter-free rows consume none — so the degenerate
+    (loss=0, jitter=0) path stays draw-free and exactly comparable to the
+    device plane. Returns (success, time, reconnects, bytes_acked,
+    counts)."""
+    alive, t, reconnects, bytes_acked, counts = _sim_rows_once(
+        ta,
+        la,
+        up_bytes=up_bytes,
+        down_bytes=down_bytes,
+        local_train_times=local_train_times,
+        rng=rng,
+        connected=connected,
+    )
+    if retry is None:
+        return alive, t, reconnects, bytes_acked, counts
+    k = la.loss.shape[0]
+    ra = retry if isinstance(retry, _RetryArrays) else _RetryArrays.broadcast(retry, k)
+    max_r = int(ra.max_retries.max()) if k else 0
+    up_bytes = np.asarray(up_bytes)
+    down_bytes = np.asarray(down_bytes)
+    local_train_times = np.asarray(local_train_times)
+    for attempt in range(1, max_r + 1):
+        failed = np.where(
+            ~alive & (attempt <= ra.max_retries) & (t < ra.deadline_cap)
+        )[0]
+        if failed.size == 0:
+            break
+        wait = np.minimum(
+            ra.base[failed] * ra.factor[failed] ** (attempt - 1),
+            ra.max_backoff[failed],
+        )
+        jit = ra.jitter[failed]
+        jrows = np.where(jit > 0)[0]
+        if jrows.size:
+            wait[jrows] *= 1.0 + jit[jrows] * rng.random(jrows.size)
+        a2, t2, rc2, ba2, c2 = _sim_rows_once(
+            ta.take(failed),
+            la.take(failed),
+            up_bytes=up_bytes[failed],
+            down_bytes=down_bytes[failed],
+            local_train_times=local_train_times[failed],
+            rng=rng,
+            connected=np.zeros(failed.size, bool),
+        )
+        t[failed] += wait + t2
+        reconnects[failed] += rc2
+        bytes_acked[failed] = ba2
+        alive[failed] = a2
+        for f in _TRACE_FIELDS:
+            counts[f][failed] += c2[f]
+    return alive, t, reconnects, bytes_acked, counts
+
+
+def _sim_rows_once(
+    ta: _TcpArrays,
+    la: _LinkArrays,
+    *,
+    up_bytes: np.ndarray,
+    down_bytes: np.ndarray,
+    local_train_times: np.ndarray,
+    rng: np.random.Generator,
+    connected: np.ndarray,
+):
+    """One FL round ATTEMPT for a plane of rows with batched draws:
+    handshake-if-needed -> download -> idle (keepalive/middlebox) ->
+    reconnect-if-dead -> upload, each stage sampled for every row at once.
+    Returns (success, time, reconnects, bytes_acked, counts)."""
     k = la.loss.shape[0]
     t = np.zeros(k)
     reconnects = np.zeros(k, np.int64)
@@ -639,6 +808,7 @@ def sim_cohort_round(
     connected: np.ndarray,
     download_bytes: Optional[int] = None,
     trace: bool = False,
+    retry: Optional[RetryPolicy] = None,
 ) -> CohortOutcome:
     """One FL round for a whole cohort with batched draws.
 
@@ -651,7 +821,8 @@ def sim_cohort_round(
     the full-model download; omitting ``download_bytes`` falls back to
     symmetric billing. With ``trace=True`` the outcome carries sparse
     per-client event counts (see _TRACE_FIELDS) instead of an ordered
-    event list.
+    event list. ``retry`` applies the application-level retry ladder to
+    every row (see ``_sim_rows``).
     """
     download_bytes = update_bytes if download_bytes is None else download_bytes
     k = len(links)
@@ -663,6 +834,7 @@ def sim_cohort_round(
         local_train_times=np.asarray(local_train_times, float),
         rng=rng,
         connected=np.asarray(connected, bool),
+        retry=retry,
     )
     return CohortOutcome(alive, t, reconnects, bytes_acked, counts if trace else None)
 
@@ -680,7 +852,7 @@ def _per_scenario_rows(x, sizes, dtype):
 
 
 def _sim_grid_round_ragged(
-    tcp_list, links, up_s, down_s, ltt_s, conn_s, rng, rngs, trace
+    tcp_list, links, up_s, down_s, ltt_s, conn_s, rng, rngs, trace, retry_list
 ) -> GridOutcome:
     """Ragged grid round: scenarios keep their true cohort widths. Parity
     mode loops scenarios on their own generators (exact widths, exact
@@ -710,6 +882,7 @@ def _sim_grid_round_ragged(
                 connected=conn_s[s],
                 download_bytes=down_s[s],
                 trace=trace,
+                retry=retry_list[s],
             )
             c = sizes[s]
             success[s, :c] = o.success
@@ -731,6 +904,11 @@ def _sim_grid_round_ragged(
             local_train_times=np.concatenate(ltt_s) if S else np.zeros(0),
             rng=rng,
             connected=np.concatenate(conn_s) if S else np.zeros(0, bool),
+            retry=(
+                _RetryArrays.from_policies(retry_list).take(scen)
+                if any(p is not None for p in retry_list)
+                else None
+            ),
         )
         # boolean scatter is row-major: rows land scenario by scenario in
         # exactly the concatenation order
@@ -755,6 +933,7 @@ def sim_grid_round(
     rngs: Optional[Sequence[np.random.Generator]] = None,
     download_bytes=None,
     trace: bool = False,
+    retry=None,
 ) -> GridOutcome:
     """One FL round for a whole characterization grid: S scenarios x C
     clients, each scenario with its own TcpParams and per-client links.
@@ -787,9 +966,18 @@ def sim_grid_round(
     [C_s] arrays. Outputs are then padded to the widest cohort and
     ``GridOutcome.mask`` marks real cells; fused mode concatenates real
     rows only, so padding never consumes shared-stream draws.
+
+    ``retry`` is None, one RetryPolicy for every scenario, or a length-S
+    sequence of per-scenario ``Optional[RetryPolicy]`` — the grid engine
+    passes per-point policies so one plane can mix retry budgets.
     """
     S = len(links)
     tcp_list = [tcps] * S if isinstance(tcps, TcpParams) else list(tcps)
+    retry_list = (
+        [retry] * S
+        if retry is None or isinstance(retry, RetryPolicy)
+        else list(retry)
+    )
     if (rng is None) == (rngs is None):
         raise ValueError("pass exactly one of rng= (fused) or rngs= (per-scenario)")
 
@@ -811,6 +999,7 @@ def sim_grid_round(
             rng,
             rngs,
             trace,
+            retry_list,
         )
     C = sizes[0] if S else 0
 
@@ -836,6 +1025,7 @@ def sim_grid_round(
                 connected=connected[s],
                 download_bytes=down[s],
                 trace=trace,
+                retry=retry_list[s],
             )
             for s in range(S)
         ]
@@ -861,6 +1051,11 @@ def sim_grid_round(
         local_train_times=local_train_times.reshape(-1),
         rng=rng,
         connected=connected.reshape(-1),
+        retry=(
+            _RetryArrays.from_policies(retry_list).take(np.repeat(np.arange(S), C))
+            if any(p is not None for p in retry_list)
+            else None
+        ),
     )
     return GridOutcome(
         alive.reshape(S, C),

@@ -26,7 +26,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.transport.link import LinkProfile
-from repro.transport.params import TcpParams
+from repro.transport.params import RetryPolicy, TcpParams
 
 # Calibration constants (DESIGN §8.1): characteristic FL burst window for
 # reorder-pressure, and RTO-stall escalation under heavy loss.
@@ -254,6 +254,70 @@ def client_round(
     if p_ok <= 0.0 or math.isinf(t):
         return ClientRoundOutcome(0.0, math.inf, reconnects, detail)
     return ClientRoundOutcome(p_ok, t, reconnects, detail)
+
+
+def retry_round(
+    tcp: TcpParams,
+    link: LinkProfile,
+    retry: RetryPolicy,
+    *,
+    update_bytes: int,
+    local_train_time: float,
+    connected: bool = True,
+    download_bytes: Optional[int] = None,
+) -> ClientRoundOutcome:
+    """Closed-form composite of ``client_round`` under a ``RetryPolicy``:
+    a failed exchange re-attempts the ENTIRE round (fresh handshake —
+    the failure killed the connection — plus download/train/upload) after
+    the policy's backoff, up to ``max_retries`` times or until the
+    accumulated clock passes ``deadline_cap``.
+
+    Mirrors the truncated-geometric structure of the DES wrapper in
+    ``repro.transport.des.sim_client_round``: with per-attempt success
+    probability p (p0 for the first attempt, which may start connected;
+    p1 for re-attempts, which never do),
+
+        p_complete = 1 - (1-p0) * (1-p1)^R_eff
+        E[time | success] = sum_k P(succeed on attempt k) * E[t_k] / p_complete
+
+    where attempt k's expected clock includes every prior attempt's
+    failure time (approximated by its conditional completion time) plus
+    the mean backoff ``retry.backoff(k) * (1 + jitter/2)``. Deterministic
+    expectations only — the DES remains the stochastic oracle."""
+    first = client_round(
+        tcp, link, update_bytes=update_bytes,
+        local_train_time=local_train_time, connected=connected,
+        download_bytes=download_bytes,
+    )
+    rea = client_round(
+        tcp, link, update_bytes=update_bytes,
+        local_train_time=local_train_time, connected=False,
+        download_bytes=download_bytes,
+    )
+    attempt_t = rea.expected_time if math.isfinite(rea.expected_time) else 0.0
+    first_t = first.expected_time if math.isfinite(first.expected_time) else 0.0
+    mean_jit = 1.0 + 0.5 * retry.jitter
+
+    # walk the ladder: attempt 0 is the base round; attempt k >= 1 starts
+    # at clock t_k = t_{k-1} + backoff(k); viable iff t_k < deadline_cap
+    t_sum, p_mass, fail_p, clock, recon = 0.0, 0.0, 1.0, 0.0, 0.0
+    for k in range(retry.max_retries + 1):
+        out, t_att = (first, first_t) if k == 0 else (rea, attempt_t)
+        if k > 0:
+            clock += retry.backoff(k) * mean_jit
+            if clock >= retry.deadline_cap:
+                break
+        p_k = fail_p * out.p_complete
+        t_sum += p_k * (clock + t_att)
+        p_mass += p_k
+        recon += fail_p * out.reconnects
+        fail_p *= 1.0 - out.p_complete
+        clock += t_att  # failed attempts burn roughly a full round's clock
+    if p_mass <= 0.0:
+        return ClientRoundOutcome(0.0, math.inf, recon, {"first": first, "retry": rea})
+    return ClientRoundOutcome(
+        p_mass, t_sum / p_mass, recon, {"first": first, "retry": rea}
+    )
 
 
 def classify(tcp: TcpParams, link: LinkProfile, *, update_bytes: int = 300_000,

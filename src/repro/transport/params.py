@@ -17,7 +17,60 @@ no training", §IV-B).
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Application-level within-round retry (FedComm-style resilience).
+
+    The paper's stack has no recovery above TCP: a client whose round
+    fails (handshake cliff, transfer collapse, deadline) is simply lost
+    for that round, which is what makes the 5 s-latency cliff *permanent*.
+    A ``RetryPolicy`` on ``ServerConfig`` lets a failed client re-attempt
+    the whole round exchange (fresh handshake + download + local train
+    window + upload — the Flower semantics of restarting the round task)
+    up to ``max_retries`` times, waiting
+
+        ``min(base_backoff * backoff_factor**(attempt-1), max_backoff)``
+
+    before re-attempt ``attempt`` (1-based), optionally inflated by a
+    uniform jitter factor in ``[1, 1+jitter]``. Re-attempts stop once the
+    client's accumulated round clock passes ``deadline_cap`` (the server
+    additionally caps this at its own ``round_deadline``; arrivals past
+    the deadline are dropped regardless).
+
+    Retry is a property of the *stochastic* transport engines (host DES
+    and device plane); the analytic model composes it in closed form via
+    :func:`repro.transport.model.retry_round`. When ``jitter == 0`` the
+    host DES consumes **no** extra RNG draws for backoff, which keeps the
+    degenerate (loss=0, jitter=0) host/device parity path exact.
+    """
+
+    max_retries: int = 2
+    base_backoff: float = 1.0  # s before the first re-attempt
+    backoff_factor: float = 2.0
+    max_backoff: float = 60.0  # s cap on any single wait
+    jitter: float = 0.0  # uniform multiplicative spread on each wait
+    deadline_cap: float = math.inf  # stop re-attempting past this round clock
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.base_backoff < 0 or self.max_backoff < 0 or self.jitter < 0:
+            raise ValueError("backoff parameters must be non-negative")
+        if self.backoff_factor < 1.0:
+            raise ValueError("backoff_factor must be >= 1")
+
+    def backoff(self, attempt: int) -> float:
+        """Deterministic wait before re-attempt ``attempt`` (1-based)."""
+        return float(
+            min(self.base_backoff * self.backoff_factor ** (attempt - 1), self.max_backoff)
+        )
+
+    def replace(self, **kw) -> "RetryPolicy":
+        return dataclasses.replace(self, **kw)
 
 
 @dataclass(frozen=True)

@@ -66,9 +66,10 @@ from repro.transport.des import (
     GridOutcome,
     _LinkArrays,
     _per_scenario_rows,
+    _RetryArrays,
     _TcpArrays,
 )
-from repro.transport.params import TcpParams
+from repro.transport.params import RetryPolicy, TcpParams
 
 _MAX_ITERS = 200_000  # host loop's runaway cap, mirrored
 
@@ -134,6 +135,44 @@ class LinkPlane(NamedTuple):
             queue_limit=f(la.queue_limit),
             middlebox_timeout=f(la.middlebox_timeout),
         )
+
+
+class RetryPlane(NamedTuple):
+    """Per-row RetryPolicy as device arrays (the jnp twin of _RetryArrays)."""
+
+    max_retries: jax.Array  # int32
+    base: jax.Array
+    factor: jax.Array
+    max_backoff: jax.Array
+    jitter: jax.Array
+    deadline_cap: jax.Array
+
+    @classmethod
+    def from_arrays(cls, ra: _RetryArrays) -> "RetryPlane":
+        f = lambda x: jnp.asarray(np.asarray(x, np.float64))
+        return cls(
+            max_retries=jnp.asarray(np.asarray(ra.max_retries, np.int32)),
+            base=f(ra.base),
+            factor=f(ra.factor),
+            max_backoff=f(ra.max_backoff),
+            jitter=f(ra.jitter),
+            deadline_cap=f(ra.deadline_cap),
+        )
+
+
+def _pad_attempts(a: int) -> int:
+    """Pad the SYN-ladder width to a power-of-two bucket (min 4).
+
+    The ladder's draw shape is [k, attempts] with a static width, so grids
+    mixing different ``tcp_syn_retries`` would otherwise recompile per
+    distinct width. ``_plane_handshake``'s ``allowed`` mask makes the
+    padded attempts inert (a > syn_retries can never deliver), so padding
+    changes only how many unused draws each row discards — one
+    width-stable program per bucket instead of one per sysctl value."""
+    b = 4
+    while b < a:
+        b *= 2
+    return b
 
 
 def transport_plane_key(seed: int, stream: int, rnd: int) -> jax.Array:
@@ -415,21 +454,61 @@ def _plane_transfer(tp: TcpPlane, lp: LinkPlane, nbytes, key, need):
     return out["success"], out["t"], out["rto_stalls"], out["retrans_windows"]
 
 
-@functools.partial(jax.jit, static_argnames=("attempts",))
-def _device_round(tp: TcpPlane, lp: LinkPlane, up, down, ltt, connected, key, attempts):
+@functools.partial(jax.jit, static_argnames=("attempts", "n_retries"))
+def _device_round(
+    tp: TcpPlane, lp: LinkPlane, rp: RetryPlane, up, down, ltt, connected, key,
+    attempts, n_retries,
+):
     """One full FL transport round for a [k] row plane, as ONE device
-    program: handshake-if-needed -> download -> idle (keepalive/middlebox)
-    -> reconnect-if-dead -> upload. The jit twin of ``des._sim_rows``."""
+    program — the jit twin of ``des._sim_rows`` including its retry
+    ladder. The first attempt covers every row; each of the ``n_retries``
+    static re-attempts re-runs the whole pipeline masked to the rows still
+    failed under their per-row policy (budget not exhausted, clock under
+    ``deadline_cap``), exactly like the host's failed-subset re-runs. The
+    per-attempt backoff wait is the policy ladder (elementwise, static
+    exponent per unrolled attempt) scaled by a masked uniform jitter draw —
+    jitter=0 rows multiply by exactly 1, preserving the degenerate
+    host/device parity path."""
+    keys = jr.split(key, n_retries + 1)
+    alive, t, reconnects, bytes_acked, counts = _device_attempt(
+        tp, lp, up, down, ltt, connected, keys[0], attempts,
+        jnp.ones_like(connected),
+    )
+    for a in range(1, n_retries + 1):
+        ka, kj = jr.split(keys[a])
+        failed = ~alive & (a <= rp.max_retries) & (t < rp.deadline_cap)
+        wait = jnp.minimum(rp.base * rp.factor ** (a - 1.0), rp.max_backoff)
+        wait = wait * (1.0 + rp.jitter * jr.uniform(kj, wait.shape))
+        a2, t2, rc2, ba2, c2 = _device_attempt(
+            tp, lp, up, down, ltt, jnp.zeros_like(connected), ka, attempts, failed
+        )
+        t = jnp.where(failed, t + wait + t2, t)
+        reconnects = reconnects + jnp.where(failed, rc2, 0)
+        bytes_acked = jnp.where(failed, ba2, bytes_acked)
+        alive = jnp.where(failed, a2, alive)
+        counts = {
+            f: counts[f] + jnp.where(failed, c2[f], 0) for f in _TRACE_FIELDS
+        }
+    return alive, t, reconnects, bytes_acked, counts
+
+
+def _device_attempt(
+    tp: TcpPlane, lp: LinkPlane, up, down, ltt, connected, key, attempts, participate
+):
+    """One round ATTEMPT for a [k] row plane: handshake-if-needed ->
+    download -> idle (keepalive/middlebox) -> reconnect-if-dead -> upload.
+    Rows outside ``participate`` stay inert (the stage ``need`` masks keep
+    them out of every while_loop's active set)."""
     k_hs, k_dn, k_idle, k_re, k_up = jr.split(key, 5)
     zero_i = jnp.zeros_like(tp.retries2)
     t = jnp.zeros_like(tp.initial_rto)
     counts = {name: zero_i for name in _TRACE_FIELDS}
 
-    need = ~connected
+    need = participate & ~connected
     ok, ht, att = _plane_handshake(tp, lp, k_hs, attempts)
     t = t + jnp.where(need, ht, 0.0)
     reconnects = need.astype(jnp.int32)
-    alive = ok | ~need
+    alive = participate & (ok | ~need)
     counts["syn_attempts"] = jnp.where(need, att, 0)
 
     ok, dt, stalls, rwnd = _plane_transfer(tp, lp, down, k_dn, alive)
@@ -477,21 +556,37 @@ def device_sim_rows(
     local_train_times,
     connected,
     key,
+    retry=None,
 ):
     """One FL round for a flat row plane on the device (jnp outputs:
     success, time, reconnects, bytes_acked, counts). The SYN-ladder width
-    is static per distinct max(tcp_syn_retries) — one compiled program per
-    (row count, ladder width)."""
+    is padded to a power-of-two bucket (``_pad_attempts``), so one
+    compiled program covers every tcp_syn_retries in the bucket — grids
+    mixing sysctl values stay width-stable. ``retry`` is None, one
+    RetryPolicy for all rows, or a per-row ``_RetryArrays``; the retry
+    ladder unrolls max(max_retries) static re-attempts."""
     tp = TcpPlane.from_arrays(ta)
     lp = LinkPlane.from_arrays(la)
     attempts = int(ta.syn_retries.max()) + 1 if ta.syn_retries.size else 1
+    attempts = _pad_attempts(attempts)
     fdt = tp.initial_rto.dtype
     k = la.loss.shape[0]
+    ra = (
+        retry
+        if retry is None or isinstance(retry, _RetryArrays)
+        else _RetryArrays.broadcast(retry, k)
+    )
+    if ra is None:
+        ra = _RetryArrays.broadcast(None, k)
+    n_retries = int(ra.max_retries.max()) if k else 0
+    rp = RetryPlane.from_arrays(ra)
     up = jnp.broadcast_to(jnp.asarray(np.asarray(up_bytes, np.float64), fdt), (k,))
     down = jnp.broadcast_to(jnp.asarray(np.asarray(down_bytes, np.float64), fdt), (k,))
     ltt = jnp.asarray(np.asarray(local_train_times, np.float64), fdt)
     conn = jnp.asarray(np.asarray(connected, bool))
-    return _device_round(tp, lp, up, down, ltt, conn, key, attempts=attempts)
+    return _device_round(
+        tp, lp, rp, up, down, ltt, conn, key, attempts=attempts, n_retries=n_retries
+    )
 
 
 def sim_grid_round_device(
@@ -504,6 +599,7 @@ def sim_grid_round_device(
     key,
     download_bytes=None,
     trace: bool = False,
+    retry=None,
 ) -> GridOutcome:
     """Device twin of ``des.sim_grid_round``'s fused mode: one jit
     dispatch samples the whole S x C grid round on a single counter-based
@@ -513,11 +609,18 @@ def sim_grid_round_device(
     callers that bookkeep on the host should materialize them once with
     ``np.asarray`` per field, not element-by-element — plus
     ``scenario_bytes``: per-scenario delivered wire bytes, reduced on
-    device via the kernels segment-sum helper."""
+    device via the kernels segment-sum helper. ``retry`` is None, one
+    RetryPolicy for every scenario, or a length-S sequence of per-scenario
+    ``Optional[RetryPolicy]`` (matching ``sim_grid_round``)."""
     from repro.kernels.ops import segment_sum
 
     S = len(links)
     tcp_list = [tcps] * S if isinstance(tcps, TcpParams) else list(tcps)
+    retry_list = (
+        [retry] * S
+        if retry is None or isinstance(retry, RetryPolicy)
+        else list(retry)
+    )
     sizes = [len(row) for row in links]
     ragged = S > 0 and any(c != sizes[0] for c in sizes)
 
@@ -566,6 +669,11 @@ def sim_grid_round_device(
         local_train_times=ltt,
         connected=conn,
         key=key,
+        retry=(
+            _RetryArrays.from_policies(retry_list).take(scen)
+            if any(p is not None for p in retry_list)
+            else None
+        ),
     )
     scenario_bytes = segment_sum(bytes_acked, jnp.asarray(scen), num_segments=S)
 
