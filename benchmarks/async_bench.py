@@ -1,0 +1,254 @@
+"""Async engine benchmark: the latency/dropout cliffs, sync vs async.
+
+The paper's Fig. 3 cliff (no training above 5 s one-way delay, TCP
+handshake budget < RTT) is a *cohort-wide* death sentence for the
+synchronous round: one straggling half past the cliff and the whole run
+trips the failure breaker. The event-driven async engine
+(``ServerConfig.async_mode``: delivery-ordered event queue, FedBuff-style
+buffer of ``async_buffer_k``, staleness weight ``(1+s)^-alpha``) keeps
+flushing from whoever still lands.
+
+Sections, one BENCH json line:
+
+- ``degenerate``   — single client, clean link, ``async_buffer_k=1``: the
+  async engine must reproduce the sync engine BITWISE (params, simulated
+  clock, eval trace). This is the contract that makes every async number
+  comparable to its sync twin.
+- ``latency_cliff`` — heterogeneous cohort: half the clients ride the base
+  link, half sit at a swept one-way delay. Sync (min_fit=0.6) must wait on
+  the slow half — past the handshake cliff it never meets quorum and the
+  breaker declares the run dead. Async (buffer_k=3) flushes from the fast
+  half regardless. CSV of both engines across the ladder.
+- ``dropout``      — 60% of the cohort permanently killed: same story via
+  client failure instead of latency.
+
+Gates (SystemExit(1) on failure):
+
+- degenerate parity is bitwise;
+- at the cliff delay sync ends status "failed" while async trains;
+- monotonicity: async time-to-target <= sync time-to-target at the cliff
+  (a dead sync run's time-to-target is +inf);
+- dropout: async completes every tick while sync completes none.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/async_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+TARGET_LOSS = 2.35  # below initial ~2.4, reachable within the round budget
+CLIFF_DELAY = 6.0  # past the paper's 5 s handshake budget
+
+
+def _run_point(kw):
+    """One server run through the shared bench harness, returning the
+    server (for param access) and its full History (for status/causes —
+    ``_summarize`` drops both)."""
+    from benchmarks.common import _make_point, _shared_eval_data, _shared_task
+    from repro.core import FederatedServer
+
+    p = _make_point(**kw)
+    srv = FederatedServer(
+        _shared_task(), p.clients, p.strategy, tcp=p.tcp, chaos=p.chaos,
+        config=p.config, compressor=p.compressor,
+        eval_data=_shared_eval_data(),
+    )
+    return srv, srv.run()
+
+
+def _time_to_target(hist, target: float = TARGET_LOSS) -> float:
+    """Simulated seconds until eval loss first drops below ``target``
+    (+inf if it never does — e.g. the breaker killed the run first)."""
+    for m in hist.eval_metrics:
+        if m.get("loss", math.inf) < target:
+            return float(m["t"])
+    return math.inf
+
+
+def degenerate_section():
+    """Bitwise async==sync gate on the degenerate configuration (one
+    client, clean link, buffer of one): params, clock and eval trace."""
+    import jax
+
+    from benchmarks.common import _shared_eval_data, _shared_task
+    from repro.chaos import ChaosSchedule
+    from repro.core import EdgeClient, FederatedServer, ServerConfig, fedavg
+    from repro.data import make_federated_mnist
+    from repro.transport import DEFAULT, LAB
+
+    def run(async_mode: bool):
+        shards = make_federated_mnist(1, 64, seed=0)
+        srv = FederatedServer(
+            _shared_task(), [EdgeClient(0, dataset=shards[0])], fedavg(),
+            tcp=DEFAULT, chaos=ChaosSchedule(LAB),
+            config=ServerConfig(
+                rounds=3, local_steps=2, seed=0,
+                async_mode=async_mode, async_buffer_k=1,
+            ),
+            eval_data=_shared_eval_data(),
+        )
+        return srv, srv.run()
+
+    s_sync, h_sync = run(False)
+    s_asy, h_asy = run(True)
+    params_bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+            jax.tree.leaves(s_sync.global_params),
+            jax.tree.leaves(s_asy.global_params),
+        )
+    )
+    losses = lambda h: [m.get("loss") for m in h.eval_metrics]  # noqa: E731
+    parity = (
+        params_bitwise
+        and s_sync.sim_time == s_asy.sim_time
+        and losses(h_sync) == losses(h_asy)
+        and [r.t_end for r in h_sync.rounds] == [r.t_end for r in h_asy.rounds]
+    )
+    return {
+        "rounds": 3,
+        "params_bitwise": params_bitwise,
+        "clock_equal": s_sync.sim_time == s_asy.sim_time,
+        "parity": parity,
+    }
+
+
+def latency_cliff_section(*, fast: bool = False):
+    """Sync-vs-async ladder over the slow half's one-way delay."""
+    from benchmarks.common import N_CLIENTS, emit_csv
+    from repro.transport import LAB
+
+    delays = [0.0, CLIFF_DELAY] if fast else [0.0, 1.0, 3.0, CLIFF_DELAY]
+    rounds = 4 if fast else 6
+    half = N_CLIENTS // 2
+    rows, cells = [], {}
+    for d in delays:
+        links = None
+        if d > 0:
+            slow = LAB.replace(delay=d, name=f"slow{d}")
+            links = [None] * (N_CLIENTS - half) + [slow] * half
+        for eng, akw in (
+            ("sync", {}),
+            ("async", dict(async_mode=True, async_buffer_k=3)),
+        ):
+            srv, hist = _run_point(dict(
+                min_fit=0.6, rounds=rounds, client_links=links,
+                max_consecutive_failures=3, **akw,
+            ))
+            s = hist.summary()
+            tta = _time_to_target(hist)
+            cells[(d, eng)] = {
+                "status": hist.status,
+                "completed": int(s["completed_rounds"]),
+                "tta": tta,
+            }
+            rows.append([
+                d, eng, int(s["completed_rounds"]),
+                round(s["total_time_s"], 1),
+                round(s["final_accuracy"], 4)
+                if not math.isnan(s["final_accuracy"]) else float("nan"),
+                hist.status,
+                round(tta, 1) if math.isfinite(tta) else "inf",
+            ])
+    emit_csv(
+        "async_latency_cliff: sync vs async, slow half at swept OWD",
+        ["slow_owd_s", "engine", "completed_rounds", "time_s", "accuracy",
+         "status", "time_to_target_s"],
+        rows,
+    )
+    sync_c, asy_c = cells[(CLIFF_DELAY, "sync")], cells[(CLIFF_DELAY, "async")]
+    cliff = (
+        sync_c["status"] == "failed"
+        and asy_c["status"] == "healthy"
+        and asy_c["completed"] == rounds
+    )
+    monotone = asy_c["tta"] <= sync_c["tta"]
+    return {
+        "delays_s": delays,
+        "rounds": rounds,
+        "cliff_sync_status": sync_c["status"],
+        "cliff_async_completed": asy_c["completed"],
+        "cliff_survival": cliff,
+        "tta_sync_s": sync_c["tta"] if math.isfinite(sync_c["tta"]) else "inf",
+        "tta_async_s": asy_c["tta"] if math.isfinite(asy_c["tta"]) else "inf",
+        "tta_monotone": monotone,
+        "parity": cliff and monotone,
+    }
+
+
+def dropout_section(*, fast: bool = False):
+    """60% of clients permanently dead: sync quorum (min_fit=0.6) is
+    unreachable so the breaker kills the run; async keeps flushing from
+    the survivors."""
+    from benchmarks.common import N_CLIENTS
+    from repro.chaos import ChaosSchedule, client_failure_schedule
+    from repro.transport import LAB
+
+    rounds = 4 if fast else 6
+    mk_chaos = lambda: ChaosSchedule(LAB).add(  # noqa: E731
+        client_failure_schedule(N_CLIENTS, 0.6, seed=2)
+    )
+    _, h_sync = _run_point(dict(
+        min_fit=0.6, rounds=rounds, chaos=mk_chaos(),
+        max_consecutive_failures=3,
+    ))
+    _, h_asy = _run_point(dict(
+        min_fit=0.6, rounds=rounds, chaos=mk_chaos(),
+        max_consecutive_failures=3, async_mode=True, async_buffer_k=3,
+    ))
+    gate = (
+        h_sync.completed_rounds == 0
+        and h_asy.status == "healthy"
+        and h_asy.completed_rounds == rounds
+    )
+    return {
+        "failure_rate": 0.6,
+        "rounds": rounds,
+        "sync_completed": h_sync.completed_rounds,
+        "sync_status": h_sync.status,
+        "async_completed": h_asy.completed_rounds,
+        "async_status": h_asy.status,
+        "parity": gate,
+    }
+
+
+def run_bench(*, fast: bool = False):
+    degenerate = degenerate_section()
+    cliff = latency_cliff_section(fast=fast)
+    dropout = dropout_section(fast=fast)
+    result = {
+        "bench": "async",
+        "config": {"fast": fast, "target_loss": TARGET_LOSS,
+                   "cliff_delay_s": CLIFF_DELAY},
+        "degenerate": degenerate,
+        "latency_cliff": cliff,
+        "dropout": dropout,
+        "parity": (
+            degenerate["parity"] and cliff["parity"] and dropout["parity"]
+        ),
+    }
+    print("BENCH " + json.dumps(result))
+    return result
+
+
+def main(fast: bool = False):
+    result = run_bench(fast=fast)
+    if not result["parity"]:
+        print("async_bench: ASYNC ENGINE GATE FAILURE", file=sys.stderr)
+        raise SystemExit(1)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    main(fast=args.fast)

@@ -130,12 +130,27 @@ def _make_point(
     engine: str = "default",
     transport_backend: str = "host",
     retry: Optional[RetryPolicy] = None,
+    client_links: Optional[List[Optional[LinkProfile]]] = None,
+    round_deadline: float = 600.0,
+    max_consecutive_failures: int = 5,
+    async_mode: bool = False,
+    async_buffer_k: int = 1,
+    async_concurrency: Optional[int] = None,
+    staleness_alpha: float = 0.5,
 ) -> GridPoint:
     # data_seed decouples shard contents from the RNG-stream seed: grids
     # with spawned per-point seeds keep ONE shared shard set (dataset
     # identity is what the grid engine coalesces training rows on)
     shards = _shared_shards(seed if data_seed is None else data_seed)
-    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    # client_links: per-client LinkProfile overrides (None = base link),
+    # the lever for heterogeneous-cohort benchmarks (fast/slow halves)
+    clients = [
+        EdgeClient(
+            i, dataset=s,
+            link_override=None if client_links is None else client_links[i],
+        )
+        for i, s in enumerate(shards)
+    ]
     return GridPoint(
         clients=clients,
         strategy=fedavg(min_fit=min_fit),
@@ -145,6 +160,11 @@ def _make_point(
             rounds=rounds, local_steps=local_steps, seed=seed, batched=batched,
             stochastic=stochastic, rng_streams=rng_streams, engine=engine,
             transport_backend=transport_backend, retry=retry,
+            round_deadline=round_deadline,
+            max_consecutive_failures=max_consecutive_failures,
+            async_mode=async_mode, async_buffer_k=async_buffer_k,
+            async_concurrency=async_concurrency,
+            staleness_alpha=staleness_alpha,
         ),
         compressor=_shared_compressor(compressor),
     )

@@ -26,6 +26,7 @@ def main() -> None:
 
     from benchmarks import (
         adaptive_daemon,
+        async_bench,
         compress_bench,
         env_profiles,
         fig3_latency,
@@ -56,6 +57,7 @@ def main() -> None:
         ("compress_bench", compress_bench.main),
         ("transport_plane_bench", transport_plane_bench.main),
         ("resilience_bench", resilience_bench.main),
+        ("async_bench", async_bench.main),
     ]
 
     if only is not None:

@@ -158,6 +158,12 @@ class CheckpointManager:
             return None
         return load_tree(self._step_dir(step), template)
 
+    def metadata(self, step: int) -> Dict:
+        """Read a checkpoint's metadata without loading its arrays —
+        restore paths peek here first to build the array template."""
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)["metadata"]
+
     def _gc(self):
         steps = sorted(
             int(d.split("_")[1])

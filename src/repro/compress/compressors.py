@@ -75,6 +75,13 @@ class Compressor:
     compress_plane: Optional[Callable] = None
     # Hashable semantics identity for provenance coalescing; () => opaque.
     fingerprint: tuple = ()
+    # Host-side state accessors for the round-boundary checkpoint protocol:
+    # state_get() -> JSON-safe snapshot, state_set(snapshot) -> None.
+    # Stateful compressors (randk's rotating draw counter) expose these so
+    # killed runs resume bitwise; both None => the compressor is stateless
+    # on the host and checkpoints need save nothing.
+    state_get: Optional[Callable] = None
+    state_set: Optional[Callable] = None
 
 
 def init_residual_plane(template, n: int):
@@ -278,7 +285,9 @@ def randk_compressor(ratio: float = 0.01, seed: int = 0) -> Compressor:
 
     The rotating counter is host-side Python state, so randk has no plane
     twin and an empty fingerprint: the server falls back to the per-client
-    loop and the grid engine marks its points opaque.
+    loop and the grid engine marks its points opaque. The counter IS
+    checkpointable, though — ``state_get``/``state_set`` expose it to the
+    round-boundary protocol so killed randk runs resume bitwise.
     """
     counter = [0]  # call counter: rotates coordinate selection
 
@@ -320,6 +329,8 @@ def randk_compressor(ratio: float = 0.01, seed: int = 0) -> Compressor:
         compress,
         decompress,
         _sparse_wire_bytes(ratio),
+        state_get=lambda: {"counter": counter[0]},
+        state_set=lambda s: counter.__setitem__(0, int(s["counter"])),
     )
 
 

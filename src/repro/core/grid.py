@@ -52,8 +52,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import json
-import os
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -69,7 +67,6 @@ from repro.core.server import (
     FederatedServer,
     History,
     PendingRound,
-    RoundRecord,
     ServerConfig,
     derive_rng,
 )
@@ -112,6 +109,7 @@ class GridStats:
     transport_dispatches: int = 0  # hoisted host sim_grid_round calls
     transport_device_dispatches: int = 0  # hoisted device-plane programs
     transport_rows: int = 0  # (point, client) rows sampled through them
+    async_flushes: int = 0  # async buffer flushes across all points
     # fault-domain observability: points retired by quarantine, rounds
     # lost to server_restart chaos events, and crash-consistency telemetry
     quarantined: int = 0  # points ending with status "diverged"
@@ -278,16 +276,13 @@ def _jsonable(v):
 
 
 def _check_checkpointable(servers: List[FederatedServer]) -> None:
+    # stateful compressors are fine as long as they expose state
+    # accessors (randk's rotating counter); the per-point check decides
     for i, srv in enumerate(servers):
-        comp = srv.compressor
-        if comp.name != "none" and not comp.fingerprint:
-            raise ValueError(
-                f"checkpoint_dir: point {i} uses stateful compressor "
-                f"{comp.name!r} (empty fingerprint) whose Python-side state "
-                "the round-boundary checkpoint cannot capture; use a "
-                "deterministic (fingerprinted) compressor or disable "
-                "checkpointing"
-            )
+        try:
+            srv._check_checkpointable()
+        except ValueError as e:
+            raise ValueError(f"point {i}: {e}") from None
 
 
 def run_fl_grid(
@@ -344,12 +339,16 @@ def run_fl_grid(
     identical to the uninterrupted run (everything the engine consumes is
     round-granular; split-stream points re-derive their streams per round
     and single-stream points restore exact generator state). A checkpoint
-    written by a different grid (points/seeds/rounds/transport mismatch)
-    raises instead of silently mixing sweeps. Stateful compressors (randk's
-    rotating counter) are rejected up front; the sequential per-client
-    residual path is rejected at save time. ``stop_after_round=k`` exits
-    cleanly once round k has completed (and checkpointed) — the
-    deterministic kill-switch crash/resume tests and benches are built on.
+    written by a different grid (points/seeds/rounds/transport/async
+    mismatch) raises instead of silently mixing sweeps. Stateful
+    compressors checkpoint through their ``state_get``/``state_set``
+    accessors (randk's rotating counter persists in the manifest); only a
+    stateful compressor WITHOUT accessors is rejected up front. Async
+    points persist their full event state — queue, buffer, staleness
+    clocks, per-event provenance tokens — so killed async sweeps also
+    resume bitwise. ``stop_after_round=k`` exits cleanly once round k has
+    completed (and checkpointed) — the deterministic kill-switch
+    crash/resume tests and benches are built on.
     """
     if transport not in ("per_point", "parity", "fused"):
         raise ValueError(f"unknown transport mode {transport!r}")
@@ -404,6 +403,43 @@ def run_fl_grid(
         params_keys.append(intern(("init", id(task), p.config.seed)))
         res_keys.append(intern(("res0", servers[-1].compressor.fingerprint)))
 
+    def _async_prov_hook(i: int):
+        """Advance point i's params provenance at buffer-flush time.
+
+        finish_round calls this right after ``_async_tick`` and BEFORE the
+        memoized eval, so the eval cache keys on the post-flush
+        trajectory. No flush => params unchanged => the key stands (and
+        drain-only ticks keep coalescing with their pre-tick twins). A
+        flush whose events all carry provenance tokens digests to
+        ("agg-async", prior key, aggregation identity, the (token,
+        staleness, weight) event tuple, alpha, round) — two async points
+        flushing identical events over identical trajectories keep
+        bitwise-equal params and shared eval."""
+
+        def hook(srv: FederatedServer, rnd: int) -> None:
+            fl = srv._last_flush
+            if fl is None:
+                return
+            stats.async_flushes += 1
+            if fl["opaque"]:
+                params_keys[i] = intern(("opaque", next(nonce)))
+            else:
+                params_keys[i] = intern((
+                    "agg-async",
+                    params_keys[i],
+                    srv.strategy.agg_fingerprint,
+                    fl["events"],
+                    float(srv.config.staleness_alpha),
+                    rnd,
+                    bool(srv.config.batched),
+                ))
+
+        return hook
+
+    for i, srv in enumerate(servers):
+        if srv.config.async_mode:
+            srv._async_prov_hook = _async_prov_hook(i)
+
     plane_ok = (
         task.plan_fit is not None
         and task.fit_rows is not None
@@ -436,7 +472,17 @@ def run_fl_grid(
             if hoist and _hoistable(srv):
                 pr = srv.select_cohort(rnd)
                 if pr is not None:
-                    waiting.append((i, pr))
+                    if len(pr.cohort) == 0:
+                        # async drain-only tick: nothing to sample, the
+                        # plane never sees it — the tick still drains its
+                        # event queue through finish_round
+                        job = srv.finish_transport(
+                            pr, np.zeros(0, bool), np.zeros(0), np.zeros(0)
+                        )
+                        if job is not None:
+                            jobs.append((i, job))
+                    else:
+                        waiting.append((i, pr))
                 continue
             job = srv.begin_round(rnd)
             if job is not None:
@@ -468,13 +514,18 @@ def run_fl_grid(
             pending.append((i, job, plans))
         if not pending:
             return
-        stats.rounds += 1
+        stats.rounds += 1 if any(p[1].clients for p in pending) else 0
 
         # --- row table: coalesce identical rows across points ---------------
         # groups keyed by the plane program's static axes (steps, use_prox)
         groups: Dict[tuple, dict] = {}
         placements = []  # (point_idx, job, group_key, row idxs, row keys)
         for i, job, plans in pending:
+            if not job.clients:
+                # async drain-only tick (or a tick whose every flow
+                # failed): no rows to place, the post phase still runs it
+                placements.append((i, job, None, [], []))
+                continue
             mu = float(job.prox_mu)
             gkey = (job.steps, mu > 0)
             g = groups.setdefault(
@@ -551,28 +602,48 @@ def run_fl_grid(
         comp_memo: Dict[tuple, Any] = {}
         for i, job, gkey, idxs, row_keys in placements:
             srv = servers[i]
-            stacked, weights, per_metrics = _gather_rows(
-                groups[gkey]["planes"], max_plane_rows, idxs
-            )
+            if idxs:
+                stacked, weights, per_metrics = _gather_rows(
+                    groups[gkey]["planes"], max_plane_rows, idxs
+                )
+            else:  # async drain-only tick: no rows were placed
+                stacked, weights, per_metrics = None, [], []
             # fault domain first, BEFORE the shared compression pass can
             # mutate this point's residual plane or provenance: a server
             # crash inside the round span loses the round (params and
             # residuals stay at the round boundary — params_keys/res_keys
             # unchanged); a quarantine trigger retires only this row of
             # the sweep, leaving every other point's dispatch untouched
-            # (row independence: rows never reduce across points)
-            round_time = min(max(job.arrivals), srv.config.round_deadline)
-            crash = srv.chaos.server_restart_in(
-                job.record.t_start, job.record.t_start + round_time
-            )
-            if crash is not None:
-                srv._abort_round_server_restart(job.record, crash)
-                continue
-            if srv.config.quarantine:
-                cause = srv._divergence_cause(stacked, None, per_metrics)
-                if cause is not None:
-                    srv._quarantine_round(job, cause)
+            # (row independence: rows never reduce across points). Async
+            # ticks use the deadline-horizon crash window — every event a
+            # tick can land falls inside it (see finish_round) — and the
+            # async abort also voids the event queue and buffer.
+            if srv.config.async_mode:
+                crash = srv.chaos.server_restart_in(
+                    job.record.t_start,
+                    job.record.t_start + srv.config.round_deadline,
+                )
+                if crash is not None:
+                    srv._abort_tick_server_restart(job.record, crash)
                     continue
+                if srv.config.quarantine and job.clients:
+                    cause = srv._divergence_cause(stacked, None, per_metrics)
+                    if cause is not None:
+                        srv._quarantine_round(job, cause)
+                        continue
+            else:
+                round_time = min(max(job.arrivals), srv.config.round_deadline)
+                crash = srv.chaos.server_restart_in(
+                    job.record.t_start, job.record.t_start + round_time
+                )
+                if crash is not None:
+                    srv._abort_round_server_restart(job.record, crash)
+                    continue
+                if srv.config.quarantine:
+                    cause = srv._divergence_cause(stacked, None, per_metrics)
+                    if cause is not None:
+                        srv._quarantine_round(job, cause)
+                        continue
             comp = srv.compressor
             # a compressor is provenance-shareable when its transform is a
             # deterministic function of (delta, residual) — fingerprinted
@@ -586,7 +657,7 @@ def run_fl_grid(
             precompressed = False
             if sharable:
                 comp_term = None
-                if comp.name != "none":
+                if comp.name != "none" and job.clients:
                     # residual-digest term: the decompressed deltas (and
                     # the post-round residual plane) are determined by
                     # (compressor, prior residual provenance, the rows'
@@ -617,24 +688,32 @@ def run_fl_grid(
                         ("res", res_keys[i], comp.fingerprint,
                          tuple(row_keys), slots)
                     )
-                digest = (
-                    "agg",
-                    params_keys[i],
-                    srv.strategy.agg_fingerprint,
-                    tuple(row_keys),
-                    tuple(weights),
-                    rnd,
-                    bool(srv.config.batched),
-                    (
-                        ("async", tuple(job.arrivals), srv.config.staleness_alpha)
-                        if srv.config.async_mode
-                        else None
-                    ),
-                    comp_term,
-                )
-                params_keys[i] = intern(digest)
+                if srv.config.async_mode:
+                    # async provenance is event-granular: each dispatched
+                    # row gets a token identifying its delta bitwise —
+                    # (row content, compression applied at dispatch). The
+                    # tokens ride the event queue; the params key only
+                    # advances when a flush applies them (the prov hook).
+                    srv._plane_row_keys = tuple(
+                        intern(("prov", rk, comp_term)) for rk in row_keys
+                    )
+                else:
+                    digest = (
+                        "agg",
+                        params_keys[i],
+                        srv.strategy.agg_fingerprint,
+                        tuple(row_keys),
+                        tuple(weights),
+                        rnd,
+                        bool(srv.config.batched),
+                        comp_term,
+                    )
+                    params_keys[i] = intern(digest)
             else:
-                params_keys[i] = intern(("opaque", next(nonce)))
+                if srv.config.async_mode:
+                    srv._plane_row_keys = None  # events carry opaque prov
+                else:
+                    params_keys[i] = intern(("opaque", next(nonce)))
                 res_keys[i] = intern(("opaque", next(nonce)))
             srv.finish_round(
                 job, stacked, None, weights, per_metrics,
@@ -650,57 +729,30 @@ def run_fl_grid(
         "transport": transport,
         "transport_seed": int(transport_seed),
         "coalesce": bool(coalesce),
+        # async knobs change what the queue/buffer state MEANS, so mixing
+        # them across save/resume must be refused like any other mismatch
+        "async": [
+            [bool(p.config.async_mode), int(p.config.async_buffer_k)]
+            for p in points
+        ],
     }
 
     def _save_checkpoint(mgr: CheckpointManager, next_round: int) -> None:
+        # per-point boundary state comes from the server's own protocol
+        # (arrays: params/residual/opt-state/client residuals/async delta
+        # trees; meta: clocks, RNG cursors, history, compressor counters,
+        # event queue + buffer descriptors); the grid adds its provenance
+        # tokens on top
         arrays: Dict[str, Any] = {}
         meta_points = []
         for i, srv in enumerate(servers):
-            if any(c.residual is not None for c in srv.clients):
-                raise ValueError(
-                    f"checkpoint_dir: point {i} accumulated per-client "
-                    "sequential residual state (the non-plane compression "
-                    "fallback), which round-boundary checkpoints do not "
-                    "cover; use a plane-capable compressor"
-                )
-            node: Dict[str, Any] = {"params": srv.global_params}
-            if srv._residual_plane is not None:
-                node["residual"] = srv._residual_plane
-            if srv.strategy.server_state is not None:
-                node["server_state"] = srv.strategy.server_state
-            arrays[f"p{i:04d}"] = node
-            h = srv.history
-            meta_points.append({
-                "sim_time": float(srv.sim_time),
-                "consecutive_failures": int(srv.consecutive_failures),
-                "terminated": bool(srv.terminated),
-                "status": h.status,
-                "cause": h.cause,
-                # generator states matter only for single-stream points
-                # (split streams re-derive per round) but are cheap to
-                # carry for all of them
-                "rng_state": _jsonable(srv.rng.bit_generator.state),
-                "transport_rng_state": (
-                    _jsonable(srv._transport_rng.bit_generator.state)
-                    if srv._transport_rng is not None else None
-                ),
-                "clients": [
-                    {
-                        "connected": bool(c.connected),
-                        "rounds_participated": int(c.rounds_participated),
-                        "bytes_sent": int(c.bytes_sent),
-                    }
-                    for c in srv.clients
-                ],
-                "rounds": [_jsonable(dataclasses.asdict(r)) for r in h.rounds],
-                "eval_metrics": [_jsonable(m) for m in h.eval_metrics],
-                # provenance keys: only the equivalence classes matter, so
-                # the saved ints round-trip as opaque interned tokens
-                "params_key": int(params_keys[i]),
-                "res_key": int(res_keys[i]),
-                "has_residual": srv._residual_plane is not None,
-                "has_server_state": srv.strategy.server_state is not None,
-            })
+            arrays[f"p{i:04d}"] = srv.checkpoint_arrays()
+            mp = srv.checkpoint_meta()
+            # provenance keys: only the equivalence classes matter, so
+            # the saved ints round-trip as opaque interned tokens
+            mp["params_key"] = int(params_keys[i])
+            mp["res_key"] = int(res_keys[i])
+            meta_points.append(mp)
         mgr.save(
             next_round,
             arrays,
@@ -716,8 +768,7 @@ def run_fl_grid(
         step = mgr.latest_step()
         if step is None:
             return 0
-        with open(os.path.join(mgr._step_dir(step), "manifest.json")) as f:
-            meta = json.load(f)["metadata"]
+        meta = mgr.metadata(step)
         if meta["grid"] != fingerprint:
             raise ValueError(
                 "checkpoint_dir holds a checkpoint from a DIFFERENT grid "
@@ -725,48 +776,25 @@ def run_fl_grid(
                 "refusing to mix sweeps"
             )
         # template mirrors _save_checkpoint's tree for the fresh servers
-        template: Dict[str, Any] = {}
-        for i, srv in enumerate(servers):
-            mp = meta["points"][i]
-            node: Dict[str, Any] = {"params": srv.global_params}
-            if mp["has_residual"]:
-                node["residual"] = srv._ensure_residual_plane()
-            if mp["has_server_state"]:
-                node["server_state"] = srv.strategy.server_opt.init(
-                    srv.global_params
-                )
-            template[f"p{i:04d}"] = node
+        template: Dict[str, Any] = {
+            f"p{i:04d}": srv.checkpoint_template(meta["points"][i])
+            for i, srv in enumerate(servers)
+        }
         tree, _ = load_tree(mgr._step_dir(step), template)
         for i, srv in enumerate(servers):
             mp = meta["points"][i]
-            node = tree[f"p{i:04d}"]
-            srv.global_params = jax.tree.map(jnp.asarray, node["params"])
-            if mp["has_residual"]:
-                srv._residual_plane = jax.tree.map(
-                    jnp.asarray, node["residual"]
-                )
-            if mp["has_server_state"]:
-                srv.strategy.server_state = jax.tree.map(
-                    jnp.asarray, node["server_state"]
-                )
-            srv.sim_time = float(mp["sim_time"])
-            srv.consecutive_failures = int(mp["consecutive_failures"])
-            srv.terminated = bool(mp["terminated"])
-            srv.history.status = mp["status"]
-            srv.history.cause = mp["cause"]
-            srv.history.rounds = [RoundRecord(**r) for r in mp["rounds"]]
-            srv.history.eval_metrics = [dict(m) for m in mp["eval_metrics"]]
-            srv.rng.bit_generator.state = mp["rng_state"]
-            if mp["transport_rng_state"] is not None:
-                srv._transport_rng = np.random.default_rng()
-                srv._transport_rng.bit_generator.state = mp["transport_rng_state"]
-            for c, cs in zip(srv.clients, mp["clients"]):
-                c.connected = bool(cs["connected"])
-                c.rounds_participated = int(cs["rounds_participated"])
-                c.bytes_sent = int(cs["bytes_sent"])
+            srv.apply_checkpoint(mp, tree[f"p{i:04d}"])
             # equal saved keys across points => equal restored tokens, so
-            # trajectory sharing survives the resume; the eval cache is
-            # cold but recomputes identical values (evaluate is pure)
+            # trajectory sharing survives the resume (params provenance,
+            # residual provenance, AND the per-event dispatch tokens still
+            # riding the async queue/buffer); the eval cache is cold but
+            # recomputes identical values (evaluate is pure)
+            for _, _, ev in srv._event_queue:
+                if ev["prov"] is not None:
+                    ev["prov"] = intern(("ckpt-prov", ev["prov"]))
+            for ev in srv._async_buffer:
+                if ev["prov"] is not None:
+                    ev["prov"] = intern(("ckpt-prov", ev["prov"]))
             params_keys[i] = intern(("ckpt", mp["params_key"]))
             res_keys[i] = intern(("ckpt-res", mp["res_key"]))
         for k, v in meta["stats"].items():

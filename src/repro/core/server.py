@@ -33,6 +33,8 @@ hoisting bitwise-safe, and docs/architecture.md for the full contract.
 
 from __future__ import annotations
 
+import dataclasses
+import heapq
 import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -41,11 +43,17 @@ import jax
 import numpy as np
 
 from repro.chaos import ChaosSchedule
+from repro.checkpoint.store import CheckpointManager
 from repro.compress import Compressor, init_residual_plane, none_compressor
 from repro.core.client import EdgeClient, LocalTask
 from repro.core.strategy import Strategy
 from repro.transport import LinkProfile, TcpParams, client_round as analytic_round
-from repro.transport.des import sim_client_round, sim_cohort_round, sim_grid_round
+from repro.transport.des import (
+    delivery_events,
+    sim_client_round,
+    sim_cohort_round,
+    sim_grid_round,
+)
 from repro.transport.params import RetryPolicy
 from repro.utils import tree_stack, tree_unstack
 
@@ -168,11 +176,32 @@ class ServerConfig:
     # (Bonawitz et al. over-selection; the paper's deadline generalized)
     over_provision: float = 1.0
     quorum_close_fraction: float = 1.0
-    # async aggregation (paper SecII: "the asynchronous nature of FL allows
-    # clients to send updates independently"): apply updates one by one in
-    # arrival order, weighted by staleness^-alpha
+    # Event-driven asynchronous engine (paper SecII: "the asynchronous
+    # nature of FL allows clients to send updates independently"; FTTE,
+    # arxiv 2510.03165, for the buffered staleness-aware formulation).
+    # Rounds become dispatch TICKS: each tick dispatches fresh clients
+    # against the current model, pushes their (delivery_time, update)
+    # events onto a priority queue, then lands queued events in delivery
+    # order into a FedBuff-style buffer. When the buffer reaches
+    # ``async_buffer_k`` the whole buffer aggregates in one stacked pass,
+    # each update down-weighted by (1 + staleness)^-alpha where staleness
+    # is the number of model versions (buffer flushes) since the update's
+    # anchor was dispatched. Failed flows and stragglers past
+    # ``round_deadline`` are dropped at the transport seam — nothing ever
+    # blocks on the slowest flow — and a client that dies mid-flight
+    # (chaos ``alive()`` checked at LAND time) drops its update. A tick
+    # landing zero updates is the async analog of a failed round and
+    # counts toward ``max_consecutive_failures``.
     async_mode: bool = False
     staleness_alpha: float = 0.5
+    # buffer-flush threshold (FedBuff's K). 1 = apply every update on
+    # arrival; robust strategies (trimmed_mean/median/krum) require >= 2
+    # because their order statistics degenerate on a single update.
+    async_buffer_k: int = 1
+    # cap on concurrently in-flight clients (None = no cap beyond the
+    # cohort fraction): a tick dispatches at most
+    # async_concurrency - len(in_flight) new clients.
+    async_concurrency: Optional[int] = None
     # batched cohort engine: vectorized transport sampling, one fused
     # local-training dispatch for the whole cohort, and kernel-backed
     # stacked-delta aggregation. In the default analytic transport mode it
@@ -256,6 +285,10 @@ class ServerConfig:
                 "plane); for the analytic model use "
                 "repro.transport.model.retry_round"
             )
+        if self.async_buffer_k < 1:
+            raise ValueError("async_buffer_k must be >= 1")
+        if self.async_concurrency is not None and self.async_concurrency < 1:
+            raise ValueError("async_concurrency must be >= 1 (or None)")
 
 
 # stream tags for the split-rng discipline (spawn_key components).
@@ -308,12 +341,42 @@ class FederatedServer:
         self._transport_rng = None
         import jax
 
+        if config.async_mode and strategy.robust and config.async_buffer_k < 2:
+            raise ValueError(
+                f"async_buffer_k={config.async_buffer_k} with robust "
+                f"strategy {strategy.name!r}: order-statistic aggregation "
+                "over a buffer of one silently degenerates to identity "
+                "(the single update IS its own trimmed mean/median/krum "
+                "pick); use async_buffer_k >= 2 or a weighted-mean strategy"
+            )
         self.global_params = task.init_fn(jax.random.PRNGKey(config.seed))
         self.history = History()
         # round state-machine position (begin_round/finish_round advance it)
         self.sim_time = 0.0
         self.consecutive_failures = 0
         self.terminated = False
+        # --- event-driven async engine state (config.async_mode) ---
+        # heap of (t_land_abs, seq, event) over in-flight updates; seq is
+        # the dispatch sequence number — the deterministic tie-break AND
+        # the heap's total order (events never compare dicts)
+        self._event_queue: List[Any] = []
+        self._event_seq = 0
+        # landed-but-unflushed updates (FedBuff buffer), land order
+        self._async_buffer: List[Dict[str, Any]] = []
+        # client_ids with an update still in the queue (never re-dispatched)
+        self._in_flight: set = set()
+        # staleness clock: number of buffer flushes applied so far
+        self.model_version = 0
+        # transient per-tick outputs for the grid driver: provenance tokens
+        # for the tick's dispatched rows (set by the driver before
+        # finish_round) and the flush descriptor of the last tick (None
+        # when the tick did not flush)
+        self._plane_row_keys: Optional[tuple] = None
+        self._last_flush: Optional[Dict[str, Any]] = None
+        # grid hook, called (self, rnd) right after a tick's flush and
+        # BEFORE eval: the driver advances this point's provenance key so
+        # the memoized eval caches on the post-flush trajectory
+        self._async_prov_hook = None
         # plane-resident error feedback: one f32 residual row per client,
         # device-resident, gathered/scattered by slot inside the
         # compressor's donated jit (lazily allocated on the first
@@ -579,6 +642,8 @@ class FederatedServer:
             self.rng = derive_rng(cfg.seed, _COHORT_STREAM, rnd)
             self._transport_rng = derive_rng(cfg.seed, _TRANSPORT_STREAM, rnd)
         t = self.sim_time
+        if cfg.async_mode:
+            return self._select_cohort_async(rnd, t)
         live = [c for c in self.clients if self.chaos.alive(t, c.client_id)]
         n_total = len(self.clients)
         quorum = self.strategy.quorum(n_total)
@@ -616,12 +681,62 @@ class FederatedServer:
             download_bytes=self.task.update_bytes,
         )
 
+    def _select_cohort_async(self, rnd: int, t: float) -> PendingRound:
+        """Async dispatch half of a tick: select fresh clients to dispatch
+        against the CURRENT model. Candidates are live clients without an
+        update already in flight; ``async_concurrency`` caps the total in
+        flight. Unlike the sync path there is no quorum gate and no failed
+        round here — a tick with nothing to dispatch still drains the
+        event queue (the PendingRound just carries an empty cohort)."""
+        cfg = self.config
+        record = RoundRecord(rnd, t, t, 0, 0, False, 0.0)
+        live = [
+            c
+            for c in self.clients
+            if self.chaos.alive(t, c.client_id)
+            and c.client_id not in self._in_flight
+        ]
+        budget = len(live)
+        if cfg.async_concurrency is not None:
+            budget = max(cfg.async_concurrency - len(self._in_flight), 0)
+        k = 0
+        if live and budget > 0:
+            k = max(1, int(round(cfg.clients_per_round * len(live))))
+            k = min(k, budget, len(live))
+        if k > 0:
+            idx = self.rng.choice(len(live), size=k, replace=False)
+            cohort = [live[i] for i in idx]
+        else:
+            cohort = []
+        record.selected = k
+        record.selected_ids = [c.client_id for c in cohort]
+        links = [
+            c.link_override if c.link_override is not None
+            else self.chaos.link_at(t, c.client_id)
+            for c in cohort
+        ]
+        local_times = np.array(
+            [cfg.local_steps * c.step_time(cfg.base_step_cost) for c in cohort]
+        )
+        return PendingRound(
+            rnd=rnd,
+            record=record,
+            cohort=cohort,
+            links=links,
+            local_times=local_times,
+            connected=np.array([c.connected for c in cohort], bool),
+            upload_bytes=self.compressor.wire_bytes(self.global_params),
+            download_bytes=self.task.update_bytes,
+        )
+
     def run_transport(self, pending: PendingRound):
         """Sample the pending round's transport on this server's own
         streams: the batched cohort draw discipline or the sequential
         per-client loop. Returns (completed [k], times [k], reconnects
         [k]) — the triple ``finish_transport`` consumes, and the same
         shape the grid driver's shared plane produces per point."""
+        if len(pending.cohort) == 0:  # async drain-only tick
+            return np.zeros(0, bool), np.zeros(0, float), np.zeros(0, float)
         if self.config.batched:
             return self._cohort_transport(pending)
         comp, times, recon = [], [], []
@@ -644,6 +759,10 @@ class FederatedServer:
         [k] arrays in cohort order, from ``run_transport`` or from one
         point's row slice of the grid driver's fused transport plane."""
         cfg = self.config
+        if cfg.async_mode:
+            return self._finish_transport_async(
+                pending, completed, times, reconnects
+            )
         record = pending.record
         quorum = self.strategy.quorum(len(self.clients))
         record.reconnects += float(np.sum(np.asarray(reconnects, float)))
@@ -670,6 +789,35 @@ class FederatedServer:
             record=record,
             clients=[client for client, _ in deliveries],
             arrivals=[ct for _, ct in deliveries],
+            payload_bytes=pending.upload_bytes,
+            steps=cfg.local_steps,
+            prox_mu=self.strategy.prox_mu,
+        )
+
+    def _finish_transport_async(
+        self, pending: PendingRound, completed, times, reconnects
+    ) -> FitJob:
+        """Async post-transport half: fold the tick's sampled flows into
+        delivery EVENTS. Failed flows and stragglers past the deadline are
+        dropped here — they never enter the event queue, so the server
+        never blocks on them (the paper's burst-idle pathology). Always
+        returns a FitJob (possibly with zero clients — the drain still
+        runs); deliverable clients are listed in LAND order, and their
+        deltas are computed against the CURRENT global params (the model
+        snapshot the client downloaded at dispatch)."""
+        cfg = self.config
+        record = pending.record
+        record.reconnects += float(np.sum(np.asarray(reconnects, float)))
+        for client, done in zip(pending.cohort, completed):
+            client.connected = bool(done)  # failed exchange leaves conn dead
+        events = delivery_events(
+            completed, times, t_start=0.0, deadline=cfg.round_deadline
+        )
+        return FitJob(
+            rnd=pending.rnd,
+            record=record,
+            clients=[pending.cohort[j] for _, j in events],
+            arrivals=[t for t, _ in events],
             payload_bytes=pending.upload_bytes,
             steps=cfg.local_steps,
             prox_mu=self.strategy.prox_mu,
@@ -702,6 +850,8 @@ class FederatedServer:
         cfg = self.config
         stacked = None  # stacked deltas [C, ...] when the batched fit ran
         deltas: List[Any] = []
+        if not job.clients:  # async drain-only tick: nothing to train
+            return None, [], [], []
         if cfg.batched and self.task.batched_local_fit is not None:
             stacked, weights, per_metrics = self.task.batched_local_fit(
                 self.global_params,
@@ -761,20 +911,40 @@ class FederatedServer:
         # trigger (non-finite loss/delta) rejects it before compression so
         # the residual plane never ingests poison. ``fault_checked=True``
         # means the caller (the grid driver, which must check before its
-        # SHARED compression pass) already ran both checks.
-        round_time = min(max(arrivals), cfg.round_deadline)
-        if not fault_checked:
-            crash = self.chaos.server_restart_in(
-                record.t_start, record.t_start + round_time
-            )
-            if crash is not None:
-                self._abort_round_server_restart(record, crash)
-                return
-            if cfg.quarantine:
-                cause = self._divergence_cause(stacked, deltas, per_metrics)
-                if cause is not None:
-                    self._quarantine_round(job, cause)
+        # SHARED compression pass) already ran both checks. The async tick
+        # fault window is the full deadline horizon: every event the tick
+        # can land falls in (t_start, t_start + round_deadline] — fresh
+        # dispatches land within the deadline by construction, and queued
+        # events were dispatched at earlier (<= t_start) ticks — so a
+        # server_restart inside that window voids the tick, losing every
+        # in-flight update and the buffer (crash drops server state).
+        if cfg.async_mode:
+            if not fault_checked:
+                crash = self.chaos.server_restart_in(
+                    record.t_start, record.t_start + cfg.round_deadline
+                )
+                if crash is not None:
+                    self._abort_tick_server_restart(record, crash)
                     return
+                if cfg.quarantine and dclients:
+                    cause = self._divergence_cause(stacked, deltas, per_metrics)
+                    if cause is not None:
+                        self._quarantine_round(job, cause)
+                        return
+        else:
+            round_time = min(max(arrivals), cfg.round_deadline)
+            if not fault_checked:
+                crash = self.chaos.server_restart_in(
+                    record.t_start, record.t_start + round_time
+                )
+                if crash is not None:
+                    self._abort_round_server_restart(record, crash)
+                    return
+                if cfg.quarantine:
+                    cause = self._divergence_cause(stacked, deltas, per_metrics)
+                    if cause is not None:
+                        self._quarantine_round(job, cause)
+                        return
 
         # compression: the plane path keeps the whole cohort stacked —
         # error-feedback residuals live in a [N_clients, ...] device plane
@@ -807,22 +977,20 @@ class FederatedServer:
             record.metrics.update({f"client_{client.client_id}_{k}": v for k, v in m.items()})
 
         if cfg.async_mode:
-            # arrival-ordered asynchronous application (paper SecII):
-            # each update lands as it arrives, down-weighted by its
-            # staleness relative to the round's first arrival
-            if stacked is not None:
-                deltas = tree_unstack(stacked)
-                stacked = None
-            order = np.argsort(arrivals)
-            t0_arr = arrivals[order[0]]
-            for j in order:
-                stale = max(arrivals[j] - t0_arr, 0.0)
-                w = (1.0 + stale) ** (-cfg.staleness_alpha)
-                upd = jax.tree.map(lambda d: d * w, deltas[j])
-                self.global_params = self.strategy.aggregate(
-                    self.global_params, [upd], [weights[j]], rnd
-                )
-        elif cfg.batched:
+            flushed = self._async_tick(job, stacked, deltas, weights, rnd)
+            if self._async_prov_hook is not None:
+                self._async_prov_hook(self, rnd)
+            if (
+                flushed
+                and self.eval_data is not None
+                and (rnd + 1) % cfg.eval_every == 0
+            ):
+                m = self._evaluate(self.global_params, self.eval_data)
+                m["round"] = rnd
+                m["t"] = self.sim_time
+                self.history.eval_metrics.append(m)
+            return
+        if cfg.batched:
             # stacked-delta fast path: kernel-backed reduction (falls
             # back to the list path inside aggregate_stacked when the
             # strategy has no stacked twin)
@@ -846,13 +1014,439 @@ class FederatedServer:
             m["t"] = self.sim_time
             self.history.eval_metrics.append(m)
 
-    def run(self) -> History:
-        for rnd in range(self.config.rounds):
+    # ------------------------------------------------------------------
+    # event-driven async engine (config.async_mode)
+    # ------------------------------------------------------------------
+    def _abort_tick_server_restart(self, record: RoundRecord, crash) -> None:
+        """Async twin of ``_abort_round_server_restart``: the crash also
+        loses every in-flight update and the landed-but-unflushed buffer
+        (they live in server memory), not just the tick's dispatches."""
+        self._event_queue.clear()
+        self._async_buffer.clear()
+        self._in_flight.clear()
+        self._abort_round_server_restart(record, crash)
+
+    def _async_tick(self, job: FitJob, stacked, deltas, weights, rnd: int) -> bool:
+        """Enqueue the tick's dispatched updates, then land queued events
+        in delivery order until the buffer flushes (or the queue drains).
+        Returns True when a flush advanced the model.
+
+        - *Enqueue.* Each deliverable dispatch becomes a heap event at its
+          absolute land time, carrying the delta (trained against the
+          model version current NOW, at dispatch — that version stamp is
+          the update's staleness clock) and, in grid mode, the provenance
+          token the driver staged in ``_plane_row_keys``.
+        - *Land.* Events pop in (t_land, seq) order. Chaos ``alive()`` is
+          re-checked at LAND time: a client that died after dispatch but
+          before delivery drops its update deterministically.
+        - *Flush.* When the buffer reaches ``async_buffer_k``, every
+          buffered update is down-weighted by (1 + staleness)^-alpha
+          (staleness = model versions elapsed since its dispatch) and the
+          WHOLE buffer aggregates in one stacked pass — robust strategies
+          see the full buffer, never a single update. At most one flush
+          per tick: the clock stops at the flush event, remaining events
+          stay queued for the next tick.
+        - *Clock/breaker.* The clock advances to the last landed event
+          (flush or partial progress); a tick landing nothing is a failed
+          tick of deadline length — the async analog of a failed round —
+          and counts toward ``max_consecutive_failures``.
+        """
+        cfg = self.config
+        record = job.record
+        prov = self._plane_row_keys
+        self._plane_row_keys = None
+        if job.clients:
+            if stacked is not None:
+                deltas = tree_unstack(stacked)
+            for j, (client, dt) in enumerate(zip(job.clients, job.arrivals)):
+                ev = {
+                    "client_id": client.client_id,
+                    "slot": self._client_slot[id(client)],
+                    "delta": deltas[j],
+                    "weight": weights[j],
+                    "version": self.model_version,
+                    "prov": None if prov is None else prov[j],
+                }
+                heapq.heappush(
+                    self._event_queue,
+                    (record.t_start + float(dt), self._event_seq, ev),
+                )
+                self._event_seq += 1
+                self._in_flight.add(client.client_id)
+
+        landed = 0
+        dropped_dead = 0
+        last_land: Optional[float] = None
+        flush_time: Optional[float] = None
+        while self._event_queue:
+            t_land, _, ev = heapq.heappop(self._event_queue)
+            self._in_flight.discard(ev["client_id"])
+            last_land = t_land
+            if not self.chaos.alive(t_land, ev["client_id"]):
+                # mid-flight death: dispatched (and billed) but gone at
+                # land time — the update is dropped, deterministically
+                dropped_dead += 1
+                continue
+            ev["t_land"] = t_land
+            self._async_buffer.append(ev)
+            landed += 1
+            if len(self._async_buffer) >= cfg.async_buffer_k:
+                flush_time = t_land
+                break
+        record.delivered = landed
+        if dropped_dead:
+            record.metrics["async_dropped_dead"] = float(dropped_dead)
+
+        self._last_flush = None
+        if flush_time is not None:
+            buf = self._async_buffer
+            self._async_buffer = []
+            stales = [self.model_version - e["version"] for e in buf]
+            ws = [(1.0 + s) ** (-cfg.staleness_alpha) for s in stales]
+            if any(w != 1.0 for w in ws):
+                scaled = [
+                    jax.tree.map(lambda d, _w=w: d * _w, e["delta"])
+                    for e, w in zip(buf, ws)
+                ]
+            else:
+                scaled = [e["delta"] for e in buf]  # w==1.0: skip the mul
+            bw = [e["weight"] for e in buf]
+            if cfg.batched:
+                self.global_params = self.strategy.aggregate_stacked(
+                    self.global_params, tree_stack(scaled), bw, rnd
+                )
+            else:
+                self.global_params = self.strategy.aggregate(
+                    self.global_params, scaled, bw, rnd
+                )
+            self.model_version += 1
+            record.metrics["async_flush_size"] = float(len(buf))
+            self._last_flush = {
+                "version": self.model_version,
+                "opaque": any(e["prov"] is None for e in buf),
+                # flush identity for grid provenance: which updates, how
+                # stale, at what weight — enough that equal descriptors
+                # applied to equal params yield bitwise-equal new params
+                "events": tuple(
+                    (e["prov"], int(s), float(w))
+                    for e, s, w in zip(buf, stales, bw)
+                ),
+            }
+
+        if landed > 0:
+            # progress: updates reached the buffer (and possibly flushed)
+            self.sim_time = max(
+                self.sim_time,
+                flush_time if flush_time is not None else last_land,
+            )
+            self.consecutive_failures = 0
+            record.t_end = self.sim_time
+            self.history.rounds.append(record)
+        else:
+            # nothing landed within the tick: the async failed round
+            self._fail_round(record, cause="no_updates")
+        return flush_time is not None
+
+    def run(
+        self,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 1,
+        checkpoint_keep: int = 3,
+        stop_after_round: Optional[int] = None,
+    ) -> History:
+        """Drive the configured number of rounds (sync) or ticks (async).
+
+        ``checkpoint_dir`` makes the run crash-consistent with the same
+        round-boundary protocol the grid driver uses: every
+        ``checkpoint_every`` rounds the full boundary state persists —
+        params, residual plane, server-optimizer state, RNG cursors,
+        history, client state, compressor draw counters, and (async) the
+        event queue, buffer, and staleness clocks — and a re-invocation
+        with the same directory resumes at the first unfinished round,
+        bitwise identical to the uninterrupted run. ``stop_after_round=k``
+        exits cleanly once round k completes (the kill-switch the
+        crash/resume tests are built on)."""
+        mgr: Optional[CheckpointManager] = None
+        start_round = 0
+        if checkpoint_dir is not None:
+            self._check_checkpointable()
+            mgr = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+            start_round = self._restore_checkpoint(mgr)
+        end_round = (
+            self.config.rounds
+            if stop_after_round is None
+            else min(self.config.rounds, stop_after_round)
+        )
+        for rnd in range(start_round, end_round):
             if self.terminated:
                 break
             job = self.begin_round(rnd)
-            if job is None:
-                continue
-            stacked, deltas, weights, per_metrics = self.execute_fit(job)
-            self.finish_round(job, stacked, deltas, weights, per_metrics)
+            if job is not None:
+                stacked, deltas, weights, per_metrics = self.execute_fit(job)
+                self.finish_round(job, stacked, deltas, weights, per_metrics)
+            if mgr is not None and (rnd + 1) % checkpoint_every == 0:
+                self._save_checkpoint(mgr, rnd + 1)
         return self.history
+
+    # ------------------------------------------------------------------
+    # round-boundary checkpoint protocol (per-point; the grid driver
+    # composes the same building blocks across points)
+    # ------------------------------------------------------------------
+    def _check_checkpointable(self) -> None:
+        comp = self.compressor
+        if (
+            comp.name != "none"
+            and not comp.fingerprint
+            and (comp.state_get is None or comp.state_set is None)
+        ):
+            raise ValueError(
+                f"checkpoint_dir: compressor {comp.name!r} carries "
+                "Python-side state (empty fingerprint) without state_get/"
+                "state_set accessors, so the round-boundary checkpoint "
+                "cannot capture it"
+            )
+
+    def _checkpoint_fingerprint(self) -> Dict[str, Any]:
+        cfg = self.config
+        return {
+            "kind": "point",
+            "seed": int(cfg.seed),
+            "rounds": int(cfg.rounds),
+            "n_clients": len(self.clients),
+            "async_mode": bool(cfg.async_mode),
+            "async_buffer_k": int(cfg.async_buffer_k),
+            "strategy": self.strategy.name,
+            "compressor": self.compressor.name,
+        }
+
+    def checkpoint_arrays(self) -> Dict[str, Any]:
+        """The boundary state that lives in ARRAYS: params, residual
+        plane, server-optimizer state, per-client sequential residuals
+        (the non-plane compression fallback), and — async — the delta
+        trees riding in the event queue and the flush buffer."""
+        node: Dict[str, Any] = {"params": self.global_params}
+        if self._residual_plane is not None:
+            node["residual"] = self._residual_plane
+        if self.strategy.server_state is not None:
+            node["server_state"] = self.strategy.server_state
+        cres = {
+            f"c{j}": c.residual
+            for j, c in enumerate(self.clients)
+            if c.residual is not None
+        }
+        if cres:
+            node["cres"] = cres
+        if self._event_queue:
+            node["evq"] = {
+                f"e{n}": ev["delta"]
+                for n, (_, _, ev) in enumerate(self._event_queue)
+            }
+        if self._async_buffer:
+            node["evb"] = {
+                f"b{n}": ev["delta"]
+                for n, ev in enumerate(self._async_buffer)
+            }
+        return node
+
+    def checkpoint_meta(self) -> Dict[str, Any]:
+        """JSON-safe boundary state: clocks, RNG cursors, history, client
+        state, compressor draw counters, and the async event queue/buffer
+        descriptors (their delta trees live in ``checkpoint_arrays``).
+        Floats survive JSON bit-exactly, so a restore is bitwise."""
+        h = self.history
+
+        def _ev_meta(t_land, seq, ev):
+            return {
+                "t_land": float(t_land),
+                "seq": int(seq),
+                "client_id": int(ev["client_id"]),
+                "slot": int(ev["slot"]),
+                "weight": _jsonable(ev["weight"]),
+                "version": int(ev["version"]),
+                "prov": ev["prov"],
+            }
+
+        comp_state = (
+            self.compressor.state_get()
+            if self.compressor.state_get is not None
+            else None
+        )
+        return {
+            "sim_time": float(self.sim_time),
+            "consecutive_failures": int(self.consecutive_failures),
+            "terminated": bool(self.terminated),
+            "status": h.status,
+            "cause": h.cause,
+            # generator states matter only for single-stream points
+            # (split streams re-derive per round) but are cheap to carry
+            "rng_state": _jsonable(self.rng.bit_generator.state),
+            "transport_rng_state": (
+                _jsonable(self._transport_rng.bit_generator.state)
+                if self._transport_rng is not None
+                else None
+            ),
+            "clients": [
+                {
+                    "connected": bool(c.connected),
+                    "rounds_participated": int(c.rounds_participated),
+                    "bytes_sent": int(c.bytes_sent),
+                }
+                for c in self.clients
+            ],
+            "rounds": [_jsonable(dataclasses.asdict(r)) for r in h.rounds],
+            "eval_metrics": [_jsonable(m) for m in h.eval_metrics],
+            "has_residual": self._residual_plane is not None,
+            "has_server_state": self.strategy.server_state is not None,
+            "residual_clients": [
+                j for j, c in enumerate(self.clients) if c.residual is not None
+            ],
+            "compressor_state": _jsonable(comp_state),
+            # async engine state: the staleness clock, the dispatch
+            # sequence cursor, and the queue/buffer in HEAP-LIST order
+            # (restoring the same list preserves the heap bitwise)
+            "model_version": int(self.model_version),
+            "event_seq": int(self._event_seq),
+            "queue": [_ev_meta(t, s, ev) for t, s, ev in self._event_queue],
+            "buffer": [
+                _ev_meta(ev["t_land"], -1, ev) for ev in self._async_buffer
+            ],
+        }
+
+    def checkpoint_template(self, mp: Dict[str, Any]) -> Dict[str, Any]:
+        """Array-tree template matching ``checkpoint_arrays`` for a fresh
+        server, shaped from the saved metadata (delta trees and residuals
+        are params-shaped by construction)."""
+        import jax.numpy as jnp
+
+        node: Dict[str, Any] = {"params": self.global_params}
+        if mp["has_residual"]:
+            node["residual"] = self._ensure_residual_plane()
+        if mp["has_server_state"]:
+            node["server_state"] = self.strategy.server_opt.init(
+                self.global_params
+            )
+        if mp.get("residual_clients"):
+            f32 = jax.tree.map(
+                lambda l: jnp.zeros(l.shape, jnp.float32), self.global_params
+            )
+            node["cres"] = {f"c{j}": f32 for j in mp["residual_clients"]}
+        zeros = jax.tree.map(jnp.zeros_like, self.global_params)
+        if mp.get("queue"):
+            node["evq"] = {f"e{n}": zeros for n in range(len(mp["queue"]))}
+        if mp.get("buffer"):
+            node["evb"] = {f"b{n}": zeros for n in range(len(mp["buffer"]))}
+        return node
+
+    def apply_checkpoint(self, mp: Dict[str, Any], tree: Dict[str, Any]) -> None:
+        """Restore the boundary state captured by ``checkpoint_arrays`` +
+        ``checkpoint_meta`` onto this (freshly constructed) server."""
+        import jax.numpy as jnp
+
+        self.global_params = jax.tree.map(jnp.asarray, tree["params"])
+        if mp["has_residual"]:
+            self._residual_plane = jax.tree.map(jnp.asarray, tree["residual"])
+        if mp["has_server_state"]:
+            self.strategy.server_state = jax.tree.map(
+                jnp.asarray, tree["server_state"]
+            )
+        for j in mp.get("residual_clients", []):
+            self.clients[j].residual = jax.tree.map(
+                jnp.asarray, tree["cres"][f"c{j}"]
+            )
+        self.sim_time = float(mp["sim_time"])
+        self.consecutive_failures = int(mp["consecutive_failures"])
+        self.terminated = bool(mp["terminated"])
+        self.history.status = mp["status"]
+        self.history.cause = mp["cause"]
+        self.history.rounds = [RoundRecord(**r) for r in mp["rounds"]]
+        self.history.eval_metrics = [dict(m) for m in mp["eval_metrics"]]
+        self.rng.bit_generator.state = mp["rng_state"]
+        if mp["transport_rng_state"] is not None:
+            self._transport_rng = np.random.default_rng()
+            self._transport_rng.bit_generator.state = mp["transport_rng_state"]
+        for c, cs in zip(self.clients, mp["clients"]):
+            c.connected = bool(cs["connected"])
+            c.rounds_participated = int(cs["rounds_participated"])
+            c.bytes_sent = int(cs["bytes_sent"])
+        if (
+            mp.get("compressor_state") is not None
+            and self.compressor.state_set is not None
+        ):
+            self.compressor.state_set(mp["compressor_state"])
+        # async engine state
+        self.model_version = int(mp.get("model_version", 0))
+        self._event_seq = int(mp.get("event_seq", 0))
+
+        def _ev(em, delta):
+            return {
+                "client_id": int(em["client_id"]),
+                "slot": int(em["slot"]),
+                "delta": delta,
+                "weight": em["weight"],
+                "version": int(em["version"]),
+                "prov": em["prov"],
+            }
+
+        self._event_queue = [
+            (
+                float(em["t_land"]),
+                int(em["seq"]),
+                _ev(em, jax.tree.map(jnp.asarray, tree["evq"][f"e{n}"])),
+            )
+            for n, em in enumerate(mp.get("queue", []))
+        ]
+        self._async_buffer = []
+        for n, em in enumerate(mp.get("buffer", [])):
+            ev = _ev(em, jax.tree.map(jnp.asarray, tree["evb"][f"b{n}"]))
+            ev["t_land"] = float(em["t_land"])
+            self._async_buffer.append(ev)
+        self._in_flight = {
+            ev["client_id"] for _, _, ev in self._event_queue
+        }
+
+    def _save_checkpoint(self, mgr: CheckpointManager, next_round: int) -> None:
+        mgr.save(
+            next_round,
+            self.checkpoint_arrays(),
+            metadata={
+                "next_round": int(next_round),
+                "fingerprint": self._checkpoint_fingerprint(),
+                "point": self.checkpoint_meta(),
+            },
+        )
+
+    def _restore_checkpoint(self, mgr: CheckpointManager) -> int:
+        from repro.checkpoint.store import load_tree
+
+        step = mgr.latest_step()
+        if step is None:
+            return 0
+        meta = mgr.metadata(step)
+        if meta["fingerprint"] != self._checkpoint_fingerprint():
+            raise ValueError(
+                "checkpoint_dir holds a checkpoint from a DIFFERENT run "
+                f"(saved {meta['fingerprint']!r} vs this server "
+                f"{self._checkpoint_fingerprint()!r}); refusing to mix"
+            )
+        mp = meta["point"]
+        tree, _ = load_tree(mgr._step_dir(step), self.checkpoint_template(mp))
+        self.apply_checkpoint(mp, tree)
+        return int(meta["next_round"])
+
+
+def _jsonable(v):
+    """numpy scalars -> python, tuples/namedtuples -> lists, recursively
+    (round-boundary metadata must survive a JSON round-trip bit-exactly:
+    floats are IEEE-exact through json, ints are arbitrary-precision)."""
+    if isinstance(v, np.floating):
+        return float(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v

@@ -49,6 +49,11 @@ class Strategy:
     # provenance on this to coalesce sweep points that share a trajectory;
     # an empty fingerprint disables sharing for that strategy.
     agg_fingerprint: tuple = ()
+    # True for order-statistic aggregators (trimmed_mean/median/krum) whose
+    # semantics degenerate on a single update. The async engine's
+    # buffer-flush aggregation refuses async_buffer_k < 2 for these —
+    # aggregating a buffer of one would silently reduce them to identity.
+    robust: bool = False
 
     def quorum(self, n_total: int) -> int:
         return max(1, int(np.ceil(self.min_fit_fraction * n_total)))
@@ -177,6 +182,7 @@ def trimmed_mean(trim_fraction: float = 0.1, min_fit: float = 0.5) -> Strategy:
         "trimmed_mean", min_fit, min_fit,
         aggregate_fn=agg, stacked_aggregate_fn=agg_stacked,
         agg_fingerprint=("trimmed_mean", float(trim_fraction)),
+        robust=True,
     )
 
 
@@ -196,6 +202,7 @@ def median(min_fit: float = 0.5) -> Strategy:
         "median", min_fit, min_fit,
         aggregate_fn=agg, stacked_aggregate_fn=agg_stacked,
         agg_fingerprint=("median",),
+        robust=True,
     )
 
 
@@ -234,6 +241,7 @@ def krum(n_byzantine: int = 1, min_fit: float = 0.5) -> Strategy:
         "krum", min_fit, min_fit,
         aggregate_fn=agg, stacked_aggregate_fn=agg_stacked,
         agg_fingerprint=("krum", int(n_byzantine)),
+        robust=True,
     )
 
 

@@ -334,6 +334,31 @@ class CohortOutcome:
     trace: Optional[Dict[str, np.ndarray]] = None  # sparse event counts
 
 
+def delivery_events(
+    success, times, *, t_start: float = 0.0, deadline: float = float("inf")
+):
+    """Per-flow DELIVERY EVENTS for an event-driven consumer.
+
+    Every transport engine (sequential DES, cohort MC, host/device grid
+    planes) reports per-flow ``(success, time)`` arrays; this folds one
+    cohort's arrays into the event view the async server consumes: a list
+    of ``(t_abs, flow_idx)`` landing events — dispatch time plus flow
+    duration — for the flows that completed within ``deadline``, sorted by
+    landing time with the flow index as the deterministic tie-break.
+    Failed flows and stragglers past the deadline never become events:
+    they are dropped at the transport seam instead of stalling a consumer
+    that no longer waits out a synchronous round."""
+    succ = np.asarray(success, bool).reshape(-1)
+    tt = np.asarray(times, float).reshape(-1)
+    events = [
+        (t_start + float(t), int(j))
+        for j, (s, t) in enumerate(zip(succ, tt))
+        if s and float(t) <= deadline
+    ]
+    events.sort()
+    return events
+
+
 @dataclass
 class GridOutcome:
     """Per-(scenario, client) arrays for one grid round (all shape [S, C]).

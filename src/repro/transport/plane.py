@@ -48,6 +48,19 @@ Keys: ``transport_plane_key(seed, stream, rnd)`` is the device analog of
 keying, so a device point's transport stream is independent per round
 and decorrelated from every host stream by construction (different
 generator family).
+
+**Delivery-event contract (the async engine's seam).** Both transport
+planes — this device program and the host oracle — terminate in the same
+per-flow triple ``(success [k], time [k], reconnects [k])``, and that
+triple is the COMPLETE transport interface the event-driven async engine
+consumes: ``repro.transport.des.delivery_events`` folds it into a sorted
+``[(t_abs, flow_idx)]`` stream (failed flows and times past the round
+deadline dropped), which ``FederatedServer._finish_transport_async``
+turns into delivery-ordered queue events. Nothing downstream ever
+re-enters the flow simulation, so async points ride either backend — and
+the grid's fused ``S x C`` plane — without an async-specific transport
+path; liveness at *delivery* time is re-checked by the server against
+the chaos schedule (``alive(t_land)``), not here.
 """
 
 from __future__ import annotations

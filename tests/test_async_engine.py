@@ -1,0 +1,302 @@
+"""Event-driven async engine tests: degenerate sync parity (bitwise),
+buffered robust aggregation, chaos-at-land-time drop semantics, the async
+failure breaker, per-point and grid checkpoint kill/resume (bitwise), and
+async participation in the grid's provenance coalescing."""
+
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosSchedule, client_failure_schedule, netem
+from repro.compress import get_compressor
+from repro.core import (
+    EdgeClient,
+    FederatedServer,
+    ServerConfig,
+    fedavg,
+    median,
+    mnist_cnn_task,
+    trimmed_mean,
+)
+from repro.core.grid import GridPoint, run_fl_grid
+from repro.data import make_federated_mnist, synthetic_mnist
+from repro.transport import DEFAULT, LAB
+
+TASK = mnist_cnn_task()
+EVAL = synthetic_mnist(150, seed=7)
+
+
+def _server(n_clients=4, *, strategy=None, chaos=None, compressor=None,
+            data_seed=0, **cfg_kw):
+    shards = make_federated_mnist(n_clients, 64, seed=data_seed)
+    clients = [EdgeClient(i, dataset=s) for i, s in enumerate(shards)]
+    base = dict(rounds=4, local_steps=2, seed=0)
+    base.update(cfg_kw)
+    cfg = ServerConfig(**base)
+    return FederatedServer(
+        TASK, clients, strategy or fedavg(), tcp=DEFAULT,
+        chaos=chaos or ChaosSchedule(LAB), config=cfg,
+        compressor=compressor, eval_data=EVAL,
+    )
+
+
+def _params_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _losses(hist):
+    return [m.get("loss") for m in hist.eval_metrics]
+
+
+# ---------------------------------------------------------------------------
+# degenerate parity: async == sync bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_degenerate_async_equals_sync_bitwise():
+    """Single client, clean link, buffer_k=1: every tick dispatches, lands
+    and flushes the one update immediately at staleness 0 (weight 1.0, the
+    multiply skipped) — the async engine must reproduce the sync engine
+    bitwise, params AND clock AND eval trace."""
+    sync = _server(1, rounds=3)
+    hs = sync.run()
+    asy = _server(1, rounds=3, async_mode=True, async_buffer_k=1)
+    ha = asy.run()
+    assert _params_equal(sync.global_params, asy.global_params)
+    assert sync.sim_time == asy.sim_time
+    assert _losses(hs) == _losses(ha)
+    assert [r.t_end for r in hs.rounds] == [r.t_end for r in ha.rounds]
+
+
+def test_degenerate_parity_batched_engine():
+    sync = _server(1, rounds=3, batched=True)
+    hs = sync.run()
+    asy = _server(1, rounds=3, batched=True, async_mode=True, async_buffer_k=1)
+    ha = asy.run()
+    assert _params_equal(sync.global_params, asy.global_params)
+    assert sync.sim_time == asy.sim_time
+    assert _losses(hs) == _losses(ha)
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation over the buffer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make", [median, lambda: trimmed_mean(0.25)])
+def test_robust_strategy_rejects_buffer_of_one(make):
+    with pytest.raises(ValueError, match="async_buffer_k"):
+        _server(4, strategy=make(), async_mode=True, async_buffer_k=1)
+
+
+def test_robust_strategy_aggregates_whole_buffer():
+    """With buffer_k >= 2 the flush hands the WHOLE buffer to the robust
+    aggregator (the old engine applied updates one at a time, silently
+    degenerating order statistics to identity)."""
+    srv = _server(4, strategy=median(min_fit=0.25), rounds=5,
+                  async_mode=True, async_buffer_k=2)
+    seen = []
+    orig = srv.strategy.aggregate_fn
+
+    def spy(deltas, weights):
+        seen.append(len(list(deltas)))
+        return orig(deltas, weights)
+
+    srv.strategy.aggregate_fn = spy
+    hist = srv.run()
+    assert hist.completed_rounds > 0
+    assert seen and all(n == 2 for n in seen)
+
+
+def test_async_validation_errors():
+    with pytest.raises(ValueError, match="async_buffer_k"):
+        ServerConfig(async_buffer_k=0)
+    with pytest.raises(ValueError, match="async_concurrency"):
+        ServerConfig(async_concurrency=0)
+
+
+def test_async_concurrency_cap():
+    srv = _server(6, rounds=5, async_mode=True, async_buffer_k=2,
+                  async_concurrency=2)
+    hist = srv.run()
+    assert all(r.selected <= 2 for r in hist.rounds)
+    assert hist.completed_rounds > 0
+
+
+# ---------------------------------------------------------------------------
+# chaos at land time + breaker semantics
+# ---------------------------------------------------------------------------
+
+
+def test_client_death_after_dispatch_drops_update():
+    """A client alive at dispatch but dead at its delivery time never
+    reaches the buffer: its update is dropped deterministically, the tick
+    lands nothing, and ticks landing nothing trip the async breaker."""
+    chaos = ChaosSchedule(LAB).add(
+        netem(0, float("inf"), delay=2.0),  # slow link: lands well past t=1
+        client_failure_schedule(1, 1.0, t_start=1.0),  # dies mid-flight
+    )
+    srv = _server(1, chaos=chaos, rounds=10, async_mode=True,
+                  async_buffer_k=1, max_consecutive_failures=3)
+    init = srv.global_params
+    hist = srv.run()
+    # tick 0 dispatched the client (alive at t=0) and dropped it at land
+    assert hist.rounds[0].selected == 1
+    assert hist.rounds[0].metrics.get("async_dropped_dead") == 1.0
+    assert hist.rounds[0].failed_round and hist.rounds[0].cause == "no_updates"
+    # nothing ever flushed: params never moved, breaker declared the run dead
+    assert _params_equal(init, srv.global_params)
+    assert hist.status == "failed" and hist.cause == "max_consecutive_failures"
+    assert len(hist.rounds) == 3
+
+
+def test_async_breaker_resets_on_progress():
+    """consecutive_failures resets whenever a tick lands at least one
+    update — a transient outage shorter than the budget does not kill an
+    async run."""
+    chaos = ChaosSchedule(LAB).add(
+        # total outage spanning ~3 failed ticks (600 s deadline each),
+        # one short of the budget, then recovery
+        client_failure_schedule(2, 1.0, t_start=0.5, t_end=1500.0),
+    )
+    srv = _server(2, chaos=chaos, rounds=8, async_mode=True,
+                  async_buffer_k=1, max_consecutive_failures=4)
+    hist = srv.run()
+    assert hist.status == "healthy"
+    causes = [r.cause for r in hist.rounds]
+    assert "no_updates" in causes  # the outage was felt...
+    assert hist.completed_rounds > 0  # ...and survived
+    assert srv.consecutive_failures == 0
+
+
+# ---------------------------------------------------------------------------
+# per-point checkpointing (FederatedServer.run(checkpoint_dir=...))
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("async_mode", [False, True])
+def test_point_kill_resume_bitwise(async_mode):
+    kw = dict(rounds=4, async_mode=async_mode,
+              async_buffer_k=2 if async_mode else 1)
+    ref = _server(4, **kw)
+    href = ref.run()
+    with tempfile.TemporaryDirectory() as d:
+        _server(4, **kw).run(checkpoint_dir=d, stop_after_round=2)
+        res = _server(4, **kw)
+        hres = res.run(checkpoint_dir=d)
+    assert _params_equal(ref.global_params, res.global_params)
+    assert ref.sim_time == res.sim_time
+    assert _losses(href) == _losses(hres)
+    assert [r.t_end for r in href.rounds] == [r.t_end for r in hres.rounds]
+
+
+def test_point_checkpoint_persists_randk_counter():
+    """randk's rotating draw counter rides the checkpoint manifest, so a
+    resumed run draws the same coordinates as the uninterrupted one."""
+    mk = lambda: get_compressor("randk", ratio=0.25)
+    ref = _server(3, compressor=mk())
+    ref.run()
+    with tempfile.TemporaryDirectory() as d:
+        _server(3, compressor=mk()).run(checkpoint_dir=d, stop_after_round=2)
+        res = _server(3, compressor=mk())
+        res.run(checkpoint_dir=d)
+    assert _params_equal(ref.global_params, res.global_params)
+
+
+def test_point_checkpoint_rejects_mismatched_run():
+    with tempfile.TemporaryDirectory() as d:
+        _server(3).run(checkpoint_dir=d, stop_after_round=1)
+        other = _server(3, seed=1)
+        with pytest.raises(ValueError, match="DIFFERENT"):
+            other.run(checkpoint_dir=d)
+
+
+# ---------------------------------------------------------------------------
+# grid: async points in the fused transport plane + provenance coalescing
+# ---------------------------------------------------------------------------
+
+
+def _grid_cfg(**kw):
+    base = dict(rounds=5, local_steps=2, seed=0, batched=True,
+                stochastic=True, rng_streams="split",
+                async_mode=True, async_buffer_k=2)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _grid_point(shards, *, compressor=None, **cfg_kw):
+    return GridPoint(
+        clients=[EdgeClient(i, dataset=s) for i, s in enumerate(shards)],
+        strategy=fedavg(), tcp=DEFAULT, chaos=ChaosSchedule(LAB),
+        config=_grid_cfg(**cfg_kw), compressor=compressor,
+    )
+
+
+def test_grid_async_parity_and_coalescing():
+    """Async points ride the grid's fused transport plane bitwise (parity
+    mode == standalone run), and twin points COALESCE: the plane dispatches
+    each shared row once and memoizes eval on flush provenance — no
+    ("opaque", nonce) keys for stateless-compressor async points."""
+    shards = make_federated_mnist(4, 64, seed=0)
+    ref = FederatedServer(
+        TASK, [EdgeClient(i, dataset=s) for i, s in enumerate(shards)],
+        fedavg(), tcp=DEFAULT, chaos=ChaosSchedule(LAB), config=_grid_cfg(),
+        eval_data=EVAL,
+    )
+    href = ref.run()
+    res = run_fl_grid(
+        TASK, [_grid_point(shards), _grid_point(shards)],
+        eval_data=EVAL, transport="parity",
+    )
+    for srv, hist in zip(res.servers, res.histories):
+        assert _params_equal(ref.global_params, srv.global_params)
+        assert srv.sim_time == ref.sim_time
+        assert _losses(hist) == _losses(href)
+    s = res.stats
+    assert s.async_flushes > 0
+    # twin points shared every fit row and every eval
+    assert s.fit_rows_unique == s.fit_rows_total // 2
+    assert s.evals_computed == s.evals_requested // 2
+    assert s.transport_dispatches > 0  # async cohorts rode the fused plane
+
+
+def test_grid_async_kill_resume_bitwise():
+    shards = make_federated_mnist(4, 64, seed=0)
+    mk = lambda: [_grid_point(shards), _grid_point(shards, seed=1)]
+    ref = run_fl_grid(TASK, mk(), eval_data=EVAL, transport="parity")
+    with tempfile.TemporaryDirectory() as d:
+        run_fl_grid(TASK, mk(), eval_data=EVAL, transport="parity",
+                    checkpoint_dir=d, stop_after_round=2)
+        res = run_fl_grid(TASK, mk(), eval_data=EVAL, transport="parity",
+                          checkpoint_dir=d)
+    assert res.stats.resumed_round == 2
+    for a, b in zip(ref.servers, res.servers):
+        assert _params_equal(a.global_params, b.global_params)
+        assert a.sim_time == b.sim_time
+        assert _losses(a.history) == _losses(b.history)
+
+
+def test_grid_checkpoint_accepts_randk():
+    """run_fl_grid(checkpoint_dir=...) used to refuse randk outright; with
+    the draw counter in the manifest the sweep resumes bitwise."""
+    shards = make_federated_mnist(3, 64, seed=0)
+
+    def mk():
+        return [_grid_point(
+            shards, compressor=get_compressor("randk", ratio=0.25),
+            async_mode=False, async_buffer_k=1,
+        )]
+
+    ref = run_fl_grid(TASK, mk(), eval_data=EVAL, transport="parity")
+    with tempfile.TemporaryDirectory() as d:
+        run_fl_grid(TASK, mk(), eval_data=EVAL, transport="parity",
+                    checkpoint_dir=d, stop_after_round=2)
+        res = run_fl_grid(TASK, mk(), eval_data=EVAL, transport="parity",
+                          checkpoint_dir=d)
+    assert _params_equal(ref.servers[0].global_params,
+                         res.servers[0].global_params)

@@ -177,12 +177,18 @@ def test_resume_refuses_mismatched_grid(tmp_path):
                     checkpoint_dir=d)
 
 
-def test_checkpoint_rejects_stateful_compressor(tmp_path):
-    """randk's rotating counter is Python-side state the round-boundary
-    checkpoint cannot capture — refused up front, not corrupted later."""
-    with pytest.raises(ValueError, match="stateful compressor"):
+def test_checkpoint_rejects_stateful_compressor_without_accessors(tmp_path):
+    """Python-side compressor state is only checkpointable through the
+    state_get/state_set accessors (randk ships them — its rotating counter
+    rides the manifest, see tests/test_async_engine.py). A stateful
+    compressor WITHOUT accessors is refused up front, not corrupted
+    later."""
+    import dataclasses as _dc
+
+    opaque = _dc.replace(randk_compressor(0.1), state_get=None, state_set=None)
+    with pytest.raises(ValueError, match="state_get"):
         run_fl_grid(
-            TASK, [_point(comp=randk_compressor(0.1))], eval_data=EVAL,
+            TASK, [_point(comp=opaque)], eval_data=EVAL,
             checkpoint_dir=str(tmp_path / "ckpt"),
         )
 
