@@ -9,9 +9,33 @@ The 40-cell dry-run + roofline table is separate (compile-heavy):
 """
 
 import argparse
+import contextlib
+import signal
 import sys
 import time
 import traceback
+
+
+@contextlib.contextmanager
+def _wall_clock_budget(seconds):
+    """Per-bench wall-clock budget via SIGALRM: a bench that blows its
+    budget raises TimeoutError and is reported as a loud FAIL instead of
+    silently eating the whole CI allotment. No-op when ``seconds`` is
+    None or SIGALRM is unavailable (non-main thread / non-POSIX)."""
+    if seconds is None or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(f"benchmark exceeded --max-seconds={seconds}")
+
+    prev = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(int(seconds))
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)
 
 
 def main() -> None:
@@ -20,6 +44,10 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None,
         help="run selected benchmarks (comma-separated names)",
+    )
+    ap.add_argument(
+        "--max-seconds", type=int, default=None,
+        help="per-benchmark wall-clock budget; exceeding it fails that bench",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -34,6 +62,7 @@ def main() -> None:
         fig5_client_failure,
         fig678_tcp_params,
         kernel_bench,
+        reliability_bench,
         resilience_bench,
         round_engine_bench,
         sweep_bench,
@@ -57,6 +86,7 @@ def main() -> None:
         ("compress_bench", compress_bench.main),
         ("transport_plane_bench", transport_plane_bench.main),
         ("resilience_bench", resilience_bench.main),
+        ("reliability_bench", reliability_bench.main),  # SecVI reliability frontier
         ("async_bench", async_bench.main),
     ]
 
@@ -81,7 +111,8 @@ def main() -> None:
         print(f"\n##### {name} #####")
         t0 = time.time()
         try:
-            fn(fast=args.fast)
+            with _wall_clock_budget(args.max_seconds):
+                fn(fast=args.fast)
             status = "ok"
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()

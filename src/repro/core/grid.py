@@ -64,6 +64,7 @@ from repro.checkpoint.store import CheckpointManager, load_tree
 from repro.core.client import EdgeClient, LocalTask
 from repro.core.server import (
     _GRID_STREAM,
+    _GRID_ZR_STREAM,
     FederatedServer,
     History,
     PendingRound,
@@ -178,12 +179,26 @@ def _plane_transport(
     ``transport_backend``: host points share one numpy ``sim_grid_round``
     pass, device points share one ``sim_grid_round_device`` jit program
     (whole-round flow simulation with zero host steps; outcomes are
-    materialized in one bulk transfer per round).
+    materialized in one bulk transfer per round). The fused HOST pass is
+    additionally partitioned by reliability kind: points whose profile is
+    ``zero_rtt`` or whose retry resumes from the acked frontier take a
+    separate pass on their own stream tag (``_GRID_ZR_STREAM``) — their
+    stage masks consume the shared numpy stream in a different subset
+    order, and the split keeps plain restart-from-zero TCP points'
+    fused outcomes bitwise identical to the pre-reliability engine. The
+    device program needs no such split (draws are unconditional and
+    where-gated — co-scheduled reliability rows cannot shift a plain
+    row's stream).
 
-    Returns per-point (success [k], time [k], reconnects [k]) triples in
-    ``waiting`` order, ready for ``finish_transport``."""
+    Returns per-point (success [k], time [k], reconnects [k],
+    bytes_acked [k]) tuples in ``waiting`` order, ready for
+    ``finish_transport``."""
 
-    def _sample(sub: List[Tuple[int, PendingRound]], backend: str):
+    def _reliability(srv: FederatedServer) -> bool:
+        r = srv._effective_retry()
+        return bool(srv.tcp.zero_rtt or (r is not None and r.resume))
+
+    def _sample(sub: List[Tuple[int, PendingRound]], backend: str, stream: int):
         tcps = [servers[i].tcp for i, _ in sub]
         links = [pr.links for _, pr in sub]
         up = [np.full(len(pr.cohort), pr.upload_bytes, np.int64) for _, pr in sub]
@@ -220,14 +235,16 @@ def _plane_transport(
                 np.asarray(out.success),
                 np.asarray(out.time, float),
                 np.asarray(out.reconnects),
+                np.asarray(out.bytes_acked, float),
             )
         if mode == "parity":
             rng_kw = dict(rngs=[servers[i]._transport_rng for i, _ in sub])
         else:
-            # _GRID_STREAM, not _TRANSPORT_STREAM: the shared plane stream
-            # must be decorrelated from every point's private transport
-            # stream even when transport_seed equals the points' seeds
-            rng_kw = dict(rng=derive_rng(transport_seed, _GRID_STREAM, rnd))
+            # _GRID_STREAM/_GRID_ZR_STREAM, not _TRANSPORT_STREAM: the
+            # shared plane stream must be decorrelated from every point's
+            # private transport stream even when transport_seed equals
+            # the points' seeds
+            rng_kw = dict(rng=derive_rng(transport_seed, stream, rnd))
         out = sim_grid_round(
             tcps,
             links,
@@ -240,21 +257,38 @@ def _plane_transport(
         )
         if stats is not None:
             stats.transport_dispatches += 1
-        return out.success, out.time, out.reconnects
+        return out.success, out.time, out.reconnects, out.bytes_acked
 
     res: List[Optional[tuple]] = [None] * len(waiting)
-    for backend in ("host", "device"):
+    partitions = []  # (backend, stream tag, membership predicate)
+    if mode == "fused":
+        partitions.append(
+            ("host", _GRID_STREAM, lambda srv: not _reliability(srv))
+        )
+        partitions.append(("host", _GRID_ZR_STREAM, _reliability))
+    else:
+        # parity mode hands every scenario its point's own rng — no
+        # shared stream to protect, one host pass covers all kinds
+        partitions.append(("host", _GRID_STREAM, lambda srv: True))
+    partitions.append(("device", _GRID_STREAM, lambda srv: True))
+    for backend, stream, member in partitions:
         sub = [
             (pos, iw)
             for pos, iw in enumerate(waiting)
             if servers[iw[0]].config.transport_backend == backend
+            and member(servers[iw[0]])
         ]
         if not sub:
             continue
-        succ, tt, rc = _sample([iw for _, iw in sub], backend)
+        succ, tt, rc, ba = _sample([iw for _, iw in sub], backend, stream)
         for s, (pos, (_, pr)) in enumerate(sub):
             k = len(pr.cohort)
-            res[pos] = (succ[s][:k], tt[s][:k], rc[s][:k].astype(float))
+            res[pos] = (
+                succ[s][:k],
+                tt[s][:k],
+                rc[s][:k].astype(float),
+                np.asarray(ba[s][:k], float),
+            )
     return res
 
 
@@ -477,7 +511,11 @@ def run_fl_grid(
                         # plane never sees it — the tick still drains its
                         # event queue through finish_round
                         job = srv.finish_transport(
-                            pr, np.zeros(0, bool), np.zeros(0), np.zeros(0)
+                            pr,
+                            np.zeros(0, bool),
+                            np.zeros(0),
+                            np.zeros(0),
+                            np.zeros(0),
                         )
                         if job is not None:
                             jobs.append((i, job))
@@ -494,8 +532,8 @@ def run_fl_grid(
                 waiting, servers, transport, transport_seed, rnd, stats
             )
             stats.transport_rows += sum(len(pr.cohort) for _, pr in waiting)
-            for (i, pr), (succ, tt, rc) in zip(waiting, outcomes):
-                job = servers[i].finish_transport(pr, succ, tt, rc)
+            for (i, pr), (succ, tt, rc, ba) in zip(waiting, outcomes):
+                job = servers[i].finish_transport(pr, succ, tt, rc, ba)
                 if job is not None:
                     jobs.append((i, job))
             jobs.sort(key=lambda ij: ij[0])  # point order, deterministic

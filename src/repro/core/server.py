@@ -77,6 +77,13 @@ class RoundRecord:
     # "server_restart" | a quarantine cause ("non_finite_loss" /
     # "non_finite_delta"); empty for successful rounds
     cause: str = ""
+    # partial-progress telemetry (reliability layer): total acked wire
+    # bytes across the cohort's exchanges this round, and the subset
+    # acked by exchanges that ultimately FAILED — wasted work unless a
+    # resume= re-attempt picked the frontier back up. Defaults keep
+    # RoundRecord(**r) checkpoint restores from older runs working.
+    bytes_acked: float = 0.0
+    wasted_bytes: float = 0.0
 
 
 @dataclass
@@ -255,6 +262,14 @@ class ServerConfig:
     # the analytic model exposes the closed form via
     # repro.transport.model.retry_round instead.
     retry: Optional[RetryPolicy] = None
+    # Reliability profile override (see repro.transport.params
+    # TRANSPORT_PROFILES): None keeps the TcpParams handed to the server
+    # untouched; a profile name re-tags it at construction via
+    # transport_profile(name, base=tcp). "zero_rtt" models QUIC-style
+    # session resumption in every transport engine — the round's first
+    # handshake cannot die on the SYN budget, later reconnects within
+    # the round are free 0-RTT resumptions off the session ticket.
+    transport_profile: Optional[str] = None
     # Per-point quarantine: a round producing a non-finite client loss or
     # a non-finite delta sum is REJECTED before compression/aggregation
     # (global params and residual plane stay at the round boundary), the
@@ -285,6 +300,14 @@ class ServerConfig:
                 "plane); for the analytic model use "
                 "repro.transport.model.retry_round"
             )
+        if self.transport_profile is not None:
+            from repro.transport.params import TRANSPORT_PROFILES
+
+            if self.transport_profile not in TRANSPORT_PROFILES:
+                raise ValueError(
+                    f"unknown transport_profile {self.transport_profile!r}; "
+                    f"expected one of {TRANSPORT_PROFILES} (or None)"
+                )
         if self.async_buffer_k < 1:
             raise ValueError("async_buffer_k must be >= 1")
         if self.async_concurrency is not None and self.async_concurrency < 1:
@@ -298,6 +321,14 @@ class ServerConfig:
 _COHORT_STREAM = 1
 _TRANSPORT_STREAM = 2
 _GRID_STREAM = 3
+# The grid's fused host pass for RELIABILITY points (zero_rtt profile or
+# resume= retry): their stage masks consume the shared numpy stream in a
+# different order, so they get their own tag — pure-TCP restart-from-zero
+# points keep consuming _GRID_STREAM exactly as before the reliability
+# layer existed. (The device plane needs no such split: its draws are
+# unconditional and where-gated, so co-scheduled reliability rows cannot
+# shift a plain row's stream.)
+_GRID_ZR_STREAM = 4
 
 
 def derive_rng(seed: int, stream: int, rnd: int) -> np.random.Generator:
@@ -327,6 +358,10 @@ class FederatedServer:
         self.task = task
         self.clients = clients
         self.strategy = strategy
+        if config.transport_profile is not None:
+            from repro.transport.params import transport_profile
+
+            tcp = transport_profile(config.transport_profile, base=tcp)
         self.tcp = tcp
         self.chaos = chaos
         self.config = config
@@ -423,8 +458,10 @@ class FederatedServer:
         download_bytes: int,
     ):
         """Sequential per-client transport. Returns (completed, time,
-        reconnects). Payloads are asymmetric: ``upload_bytes`` is the
-        compressed wire size, ``download_bytes`` the full model."""
+        reconnects, bytes_acked). Payloads are asymmetric:
+        ``upload_bytes`` is the compressed wire size, ``download_bytes``
+        the full model; ``bytes_acked`` is the exchange's acked frontier
+        (full payload on success, partial progress on failure)."""
         rng = self._round_transport_rng()
         if self.config.stochastic:
             out = sim_client_round(
@@ -437,7 +474,7 @@ class FederatedServer:
                 download_bytes=download_bytes,
                 retry=self._effective_retry(),
             )
-            return out.success, out.time, out.reconnects
+            return out.success, out.time, out.reconnects, float(out.bytes_acked)
         out = analytic_round(
             self.tcp,
             link,
@@ -448,17 +485,18 @@ class FederatedServer:
         )
         completed = rng.random() < out.p_complete
         t = out.expected_time if math.isfinite(out.expected_time) else self.config.round_deadline
-        return completed, t, out.reconnects
+        ba = float(upload_bytes + download_bytes) if completed else 0.0
+        return completed, t, out.reconnects, ba
 
     # ------------------------------------------------------------------
     def _cohort_transport(self, pending: PendingRound):
         """Vectorized transport for the whole cohort.
 
-        Returns (completed [k] bool, time [k], reconnects [k]). In analytic
-        mode the completion Bernoullis are drawn as one batch — numpy
-        Generators produce the identical stream for ``rng.random(k)`` and k
-        scalar draws, so outcomes match the sequential per-client loop
-        draw-for-draw at equal seed.
+        Returns (completed [k] bool, time [k], reconnects [k],
+        bytes_acked [k]). In analytic mode the completion Bernoullis are
+        drawn as one batch — numpy Generators produce the identical
+        stream for ``rng.random(k)`` and k scalar draws, so outcomes
+        match the sequential per-client loop draw-for-draw at equal seed.
         """
         cfg = self.config
         cohort, links = pending.cohort, pending.links
@@ -493,6 +531,7 @@ class FederatedServer:
                     np.asarray(out.success)[0],
                     np.asarray(out.time, float)[0],
                     np.asarray(out.reconnects, float)[0],
+                    np.asarray(out.bytes_acked, float)[0],
                 )
             if cfg.engine == "fused_transport":
                 # opt-in shared-rng plane (sim_grid_round fused mode): the
@@ -512,7 +551,12 @@ class FederatedServer:
                     connected=connected[None],
                     retry=self._effective_retry(),
                 )
-                return out.success[0], out.time[0], out.reconnects[0].astype(float)
+                return (
+                    out.success[0],
+                    out.time[0],
+                    out.reconnects[0].astype(float),
+                    out.bytes_acked[0].astype(float),
+                )
             out = sim_cohort_round(
                 self.tcp,
                 links,
@@ -523,7 +567,12 @@ class FederatedServer:
                 download_bytes=pending.download_bytes,
                 retry=self._effective_retry(),
             )
-            return out.success, out.time, out.reconnects.astype(float)
+            return (
+                out.success,
+                out.time,
+                out.reconnects.astype(float),
+                out.bytes_acked.astype(float),
+            )
         outs = [
             analytic_round(
                 self.tcp,
@@ -543,7 +592,13 @@ class FederatedServer:
                 for o in outs
             ]
         )
-        return completed, times, np.array([o.reconnects for o in outs])
+        wire = float(pending.upload_bytes + pending.download_bytes)
+        return (
+            completed,
+            times,
+            np.array([o.reconnects for o in outs]),
+            np.where(completed, wire, 0.0),
+        )
 
     # ------------------------------------------------------------------
     def _fail_round(self, record: RoundRecord, cause: str = "quorum") -> None:
@@ -733,39 +788,62 @@ class FederatedServer:
         """Sample the pending round's transport on this server's own
         streams: the batched cohort draw discipline or the sequential
         per-client loop. Returns (completed [k], times [k], reconnects
-        [k]) — the triple ``finish_transport`` consumes, and the same
-        shape the grid driver's shared plane produces per point."""
+        [k], bytes_acked [k]) — the tuple ``finish_transport`` consumes,
+        and the same shape the grid driver's shared plane produces per
+        point."""
         if len(pending.cohort) == 0:  # async drain-only tick
-            return np.zeros(0, bool), np.zeros(0, float), np.zeros(0, float)
+            z = np.zeros(0, float)
+            return np.zeros(0, bool), z, z, z
         if self.config.batched:
             return self._cohort_transport(pending)
-        comp, times, recon = [], [], []
+        comp, times, recon, acked = [], [], [], []
         for client, link, lt in zip(pending.cohort, pending.links, pending.local_times):
-            done, ct, rc = self._client_transport(
+            done, ct, rc, ba = self._client_transport(
                 client, link, float(lt), pending.upload_bytes, pending.download_bytes
             )
             comp.append(done)
             times.append(ct)
             recon.append(rc)
-        return np.array(comp, bool), np.array(times, float), np.array(recon, float)
+            acked.append(ba)
+        return (
+            np.array(comp, bool),
+            np.array(times, float),
+            np.array(recon, float),
+            np.array(acked, float),
+        )
+
+    def _record_bytes(self, record: RoundRecord, completed, bytes_acked) -> None:
+        """Fold partial-progress telemetry into the round record: total
+        acked wire bytes, and the failed-exchange subset (wasted work)."""
+        if bytes_acked is None:
+            return
+        ba = np.asarray(bytes_acked, float)
+        if ba.size == 0:
+            return
+        record.bytes_acked += float(ba.sum())
+        record.wasted_bytes += float(ba[~np.asarray(completed, bool)].sum())
 
     def finish_transport(
-        self, pending: PendingRound, completed, times, reconnects
+        self, pending: PendingRound, completed, times, reconnects,
+        bytes_acked=None,
     ) -> Optional[FitJob]:
         """Post-transport half of ``begin_round``: apply sampled outcomes
         — connection state, deliveries under the deadline, straggler
         close, quorum — and emit the round's FitJob (or record a failed
         round and return None). ``completed``/``times``/``reconnects`` are
         [k] arrays in cohort order, from ``run_transport`` or from one
-        point's row slice of the grid driver's fused transport plane."""
+        point's row slice of the grid driver's fused transport plane;
+        ``bytes_acked`` (optional, [k]) carries the exchanges' acked
+        frontiers into the round's wasted-work telemetry."""
         cfg = self.config
         if cfg.async_mode:
             return self._finish_transport_async(
-                pending, completed, times, reconnects
+                pending, completed, times, reconnects, bytes_acked
             )
         record = pending.record
         quorum = self.strategy.quorum(len(self.clients))
         record.reconnects += float(np.sum(np.asarray(reconnects, float)))
+        self._record_bytes(record, completed, bytes_acked)
         deliveries = []
         for client, done, ct in zip(pending.cohort, completed, times):
             client.connected = bool(done)  # failed exchange leaves conn dead
@@ -795,7 +873,8 @@ class FederatedServer:
         )
 
     def _finish_transport_async(
-        self, pending: PendingRound, completed, times, reconnects
+        self, pending: PendingRound, completed, times, reconnects,
+        bytes_acked=None,
     ) -> FitJob:
         """Async post-transport half: fold the tick's sampled flows into
         delivery EVENTS. Failed flows and stragglers past the deadline are
@@ -808,6 +887,7 @@ class FederatedServer:
         cfg = self.config
         record = pending.record
         record.reconnects += float(np.sum(np.asarray(reconnects, float)))
+        self._record_bytes(record, completed, bytes_acked)
         for client, done in zip(pending.cohort, completed):
             client.connected = bool(done)  # failed exchange leaves conn dead
         events = delivery_events(
@@ -835,8 +915,10 @@ class FederatedServer:
         pending = self.select_cohort(rnd)
         if pending is None:
             return None
-        completed, times, reconnects = self.run_transport(pending)
-        return self.finish_transport(pending, completed, times, reconnects)
+        completed, times, reconnects, bytes_acked = self.run_transport(pending)
+        return self.finish_transport(
+            pending, completed, times, reconnects, bytes_acked
+        )
 
     def execute_fit(self, job: FitJob):
         """Per-point local training for one FitJob: one plane dispatch for

@@ -36,9 +36,11 @@ from repro.transport.des import (
 from repro.transport.params import (
     BIG_BUFFER,
     DEFAULT,
+    TRANSPORT_PROFILES,
     TUNED_EDGE,
     RetryPolicy,
     TcpParams,
+    transport_profile,
 )
 
 
@@ -68,6 +70,8 @@ __all__ = [
     "DEFAULT",
     "TUNED_EDGE",
     "BIG_BUFFER",
+    "TRANSPORT_PROFILES",
+    "transport_profile",
     "handshake",
     "idle_phase",
     "transfer",

@@ -44,18 +44,30 @@ def _rtt_sample(link: LinkProfile, rng: np.random.Generator) -> float:
     return max(2.0 * link.delay + j, 1e-5)
 
 
-def sim_handshake(tcp: TcpParams, link: LinkProfile, rng: np.random.Generator) -> SimOutcome:
+def sim_handshake(
+    tcp: TcpParams,
+    link: LinkProfile,
+    rng: np.random.Generator,
+    *,
+    no_budget: bool = False,
+) -> SimOutcome:
+    """SYN retry ladder. With ``no_budget=True`` (a ``zero_rtt`` profile's
+    1-RTT first contact) the ladder keeps the same retransmit spacing and
+    per-attempt loss draws but is never killed by the handshake budget —
+    the kernel SYN-retry death behind the paper's 5 s OWD cliff does not
+    exist for a QUIC-style handshake; only losing every attempt fails it
+    (reported at the budget clock, like the budgeted ladder)."""
     budget = tcp.handshake_budget
     events = [Event(0.0, "SYN", "attempt 0")]
     for k in range(tcp.tcp_syn_retries + 1):
         t_send = k * tcp.syn_rto
-        if t_send > budget:
+        if not no_budget and t_send > budget:
             break
         if k > 0:
             events.append(Event(t_send, "SYN", f"retransmit {k}"))
         rtt = _rtt_sample(link, rng)
         delivered = rng.random() >= link.loss and rng.random() >= link.loss
-        if delivered and t_send + rtt <= budget:
+        if delivered and (no_budget or t_send + rtt <= budget):
             t_done = t_send + rtt
             events.append(Event(t_done, "ESTABLISHED", f"attempt {k}"))
             return SimOutcome(True, t_done, events)
@@ -190,8 +202,16 @@ def sim_client_round(
     policy's backoff, until success, the retry budget, or the policy's
     ``deadline_cap`` on the accumulated round clock. Backoff consumes one
     uniform draw per re-attempt only when ``retry.jitter > 0``.
+
+    With ``retry.resume=True`` re-attempts continue from the failed
+    attempt's acked-byte frontier (download first, then upload) instead of
+    restarting the exchange; a re-attempt whose frontier already covers
+    the download also skips the local-train window. With a ``zero_rtt``
+    TcpParams profile the round's first handshake is budget-free and every
+    later handshake (idle-death reconnect, re-attempt after first contact)
+    is a free 0-RTT session resumption.
     """
-    out = _sim_client_attempt(
+    out, ticket = _sim_client_attempt(
         tcp,
         link,
         update_bytes=update_bytes,
@@ -212,7 +232,7 @@ def sim_client_round(
         if retry.jitter > 0:
             wait *= 1.0 + retry.jitter * rng.random()
         out.events.append(Event(out.time + wait, "RETRY", f"re-attempt {attempt}"))
-        a = _sim_client_attempt(
+        a, ticket = _sim_client_attempt(
             tcp,
             link,
             update_bytes=update_bytes,
@@ -220,6 +240,8 @@ def sim_client_round(
             rng=rng,
             connected=False,
             download_bytes=download_bytes,
+            ticket=ticket,
+            progress=out.bytes_acked if retry.resume else 0,
         )
         base = out.time + wait
         out.events += [Event(e.t + base, e.kind, e.detail) for e in a.events]
@@ -243,8 +265,18 @@ def _sim_client_attempt(
     rng: np.random.Generator,
     connected: bool,
     download_bytes: Optional[int],
-) -> SimOutcome:
+    ticket: bool = False,
+    progress: int = 0,
+) -> Tuple[SimOutcome, bool]:
+    """One round attempt. ``ticket`` carries in-round 0-RTT session state
+    across retry re-attempts (a ``zero_rtt`` profile reconnects for free
+    once the round has made first contact); ``progress`` is the resume
+    frontier in bytes — download acked first, then upload — from which a
+    resumed re-attempt continues. Failure outcomes report the attempt's
+    (cumulative) frontier in ``bytes_acked``; returns (outcome, ticket)."""
     download_bytes = update_bytes if download_bytes is None else download_bytes
+    p0 = int(progress)
+    f = p0  # acked-byte frontier this attempt advances
     t = 0.0
     events: List[Event] = []
     reconnects = 0
@@ -253,42 +285,76 @@ def _sim_client_attempt(
         return [Event(e.t + dt, e.kind, e.detail) for e in evts]
 
     if not connected:
-        hs = sim_handshake(tcp, link, rng)
-        events += hs.events
-        t += hs.time
-        reconnects += 1
-        if not hs.success:
-            return SimOutcome(False, t, events, reconnects)
+        if tcp.zero_rtt and ticket:
+            reconnects += 1
+            events.append(Event(t, "ZRTT_RESUME", "0-RTT session resumption"))
+        else:
+            hs = sim_handshake(tcp, link, rng, no_budget=tcp.zero_rtt)
+            events += hs.events
+            t += hs.time
+            reconnects += 1
+            if not hs.success:
+                return SimOutcome(False, t, events, reconnects, bytes_acked=f), ticket
+            ticket = True
+    else:
+        ticket = True
 
-    down = sim_transfer(tcp, link, download_bytes, rng)
-    events += shift(down.events, t)
-    t += down.time
-    if not down.success:
-        return SimOutcome(False, t, events, reconnects)
+    d0 = min(p0, download_bytes)
+    down_rem = download_bytes - d0
+    if p0 == 0 or down_rem > 0:
+        down = sim_transfer(tcp, link, down_rem, rng)
+        events += shift(down.events, t)
+        t += down.time
+        f = d0 + down.bytes_acked
+        if not down.success:
+            return SimOutcome(False, t, events, reconnects, bytes_acked=f), ticket
+        f = download_bytes
 
-    state, idle_events = sim_idle(tcp, link, local_train_time, rng)
-    events += shift(idle_events, t)
-    t += local_train_time
-    if state != "alive":
-        if state == "silent_dead":
-            stall = min(
-                sum(min(tcp.initial_rto * 2**i, tcp.max_rto) for i in range(6)), 60.0
-            )
-            t += stall
-            events.append(Event(t, "STALL", "discovered dead connection on send"))
-        hs = sim_handshake(tcp, link, rng)
-        events += shift(hs.events, t)
-        t += hs.time
-        reconnects += 1
-        if not hs.success:
-            return SimOutcome(False, t, events, reconnects)
+    # a frontier past the download means a prior attempt delivered the
+    # model AND ran the local-train window; the resumed attempt is just
+    # the upload tail — no retraining, no idle phase to survive
+    if p0 == 0 or p0 < download_bytes:
+        state, idle_events = sim_idle(tcp, link, local_train_time, rng)
+        events += shift(idle_events, t)
+        t += local_train_time
+        if state != "alive":
+            if state == "silent_dead":
+                stall = min(
+                    sum(min(tcp.initial_rto * 2**i, tcp.max_rto) for i in range(6)), 60.0
+                )
+                t += stall
+                events.append(Event(t, "STALL", "discovered dead connection on send"))
+            if tcp.zero_rtt:
+                # idle death implies first contact happened: free 0-RTT
+                reconnects += 1
+                events.append(Event(t, "ZRTT_RESUME", "0-RTT session resumption"))
+            else:
+                hs = sim_handshake(tcp, link, rng)
+                events += shift(hs.events, t)
+                t += hs.time
+                reconnects += 1
+                if not hs.success:
+                    return (
+                        SimOutcome(False, t, events, reconnects, bytes_acked=f),
+                        ticket,
+                    )
 
-    up = sim_transfer(tcp, link, update_bytes, rng)
-    events += shift(up.events, t)
-    t += up.time
-    if not up.success:
-        return SimOutcome(False, t, events, reconnects)
-    return SimOutcome(True, t, events, reconnects, bytes_acked=update_bytes + download_bytes)
+    u0 = max(p0 - download_bytes, 0)
+    up_rem = update_bytes - u0
+    if p0 == 0 or up_rem > 0:
+        up = sim_transfer(tcp, link, up_rem, rng)
+        events += shift(up.events, t)
+        t += up.time
+        f = download_bytes + u0 + up.bytes_acked
+        if not up.success:
+            return SimOutcome(False, t, events, reconnects, bytes_acked=f), ticket
+    return (
+        SimOutcome(
+            True, t, events, reconnects,
+            bytes_acked=update_bytes + download_bytes,
+        ),
+        ticket,
+    )
 
 
 # ===========================================================================
@@ -424,6 +490,7 @@ class _TcpArrays:
     max_rto: np.ndarray
     mss: np.ndarray  # int
     window_bytes: np.ndarray  # int
+    zero_rtt: np.ndarray  # bool — QUIC-style session-resumption profile
 
     @classmethod
     def from_params(cls, tcps: Sequence[TcpParams]) -> "_TcpArrays":
@@ -441,6 +508,7 @@ class _TcpArrays:
             max_rto=np.array([t.max_rto for t in tcps], float),
             mss=np.array([t.mss for t in tcps], np.int64),
             window_bytes=np.array([t.window_bytes for t in tcps], np.int64),
+            zero_rtt=np.array([t.zero_rtt for t in tcps], bool),
         )
 
     @classmethod
@@ -453,7 +521,7 @@ class _TcpArrays:
             self.ka_time[idx], self.ka_intvl[idx], self.ka_probes[idx],
             self.retries2[idx], self.rmem[idx], self.sack[idx],
             self.initial_rto[idx], self.max_rto[idx], self.mss[idx],
-            self.window_bytes[idx],
+            self.window_bytes[idx], self.zero_rtt[idx],
         )
 
 
@@ -470,6 +538,7 @@ class _RetryArrays:
     max_backoff: np.ndarray
     jitter: np.ndarray
     deadline_cap: np.ndarray
+    resume: np.ndarray  # bool — re-attempts continue from the acked frontier
 
     @classmethod
     def from_policies(cls, policies: Sequence[Optional[RetryPolicy]]) -> "_RetryArrays":
@@ -481,6 +550,7 @@ class _RetryArrays:
             max_backoff=np.array([p.max_backoff for p in ps], float),
             jitter=np.array([p.jitter for p in ps], float),
             deadline_cap=np.array([p.deadline_cap for p in ps], float),
+            resume=np.array([p.resume for p in ps], bool),
         )
 
     @classmethod
@@ -491,6 +561,7 @@ class _RetryArrays:
         return _RetryArrays(
             self.max_retries[idx], self.base[idx], self.factor[idx],
             self.max_backoff[idx], self.jitter[idx], self.deadline_cap[idx],
+            self.resume[idx],
         )
 
 
@@ -511,7 +582,10 @@ def _grid_handshake(
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Returns (success [k], time [k], syn_attempts [k]); all SYN attempts
     sampled at once. Rows with fewer allowed retries are masked, so mixed
-    TcpParams share one lockstep pass."""
+    TcpParams share one lockstep pass. ``zero_rtt`` rows run the same
+    ladder mechanics without the budget kill (first-contact 1-RTT
+    handshake of the QUIC-style profile); failures still report at the
+    budget clock."""
     k = la.loss.shape[0]
     attempts = int(ta.syn_retries.max()) + 1
     a_grid = np.arange(attempts)
@@ -519,8 +593,11 @@ def _grid_handshake(
     rtt = _rtt_samples(la, rng, (attempts,)).T  # [k, A]
     delivered = _bern_ok(la, rng, (attempts,)).T  # [k, A]
     budget = ta.handshake_budget[:, None]
-    allowed = (a_grid[None, :] <= ta.syn_retries[:, None]) & (t_send <= budget)
-    ok = delivered & allowed & (t_send + rtt <= budget)
+    no_budget = ta.zero_rtt[:, None]
+    allowed = (a_grid[None, :] <= ta.syn_retries[:, None]) & (
+        no_budget | (t_send <= budget)
+    )
+    ok = delivered & allowed & (no_budget | (t_send + rtt <= budget))
     success = ok.any(axis=1)
     first = np.argmax(ok, axis=1)
     rows = np.arange(k)
@@ -580,9 +657,11 @@ def _grid_idle(
 
 def _grid_transfer(
     ta: _TcpArrays, la: _LinkArrays, nbytes: np.ndarray, rng: np.random.Generator
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Lockstep AIMD over the rows; returns (success, time, rto_stalls,
-    retrans_windows), all [k].
+    retrans_windows, acked_bytes), all [k] — ``acked_bytes`` is the
+    durable acked frontier (``nbytes`` on success, the partial frontier a
+    resumed re-attempt continues from on failure).
 
     Mirrors sim_transfer's per-window mechanics (window sizing, binomial
     loss, SACK reorder accounting, RTO backoff with constant per-attempt
@@ -668,7 +747,8 @@ def _grid_transfer(
         done = active & (acked >= segs_total)
         success |= done
         active &= ~done
-    return success, t, rto_stalls, retrans_windows
+    acked_bytes = np.where(success, nbytes, np.minimum(acked * ta.mss, nbytes))
+    return success, t, rto_stalls, retrans_windows, acked_bytes
 
 
 def _sim_rows(
@@ -687,13 +767,15 @@ def _sim_rows(
 
     ``retry`` is None, a RetryPolicy (broadcast to all rows), or a
     ``_RetryArrays`` with per-row policies. Failed rows re-run the whole
-    attempt pipeline (``_sim_rows_once``, reconnecting from scratch) after
-    their backoff wait; jitter rows consume one uniform draw per
+    attempt pipeline (``_sim_rows_once``) after their backoff wait —
+    reconnecting from scratch by default, or continuing from the acked
+    frontier on ``resume`` rows (ticket and progress registers thread
+    through the ladder). Jitter rows consume one uniform draw per
     re-attempt, jitter-free rows consume none — so the degenerate
     (loss=0, jitter=0) path stays draw-free and exactly comparable to the
     device plane. Returns (success, time, reconnects, bytes_acked,
     counts)."""
-    alive, t, reconnects, bytes_acked, counts = _sim_rows_once(
+    alive, t, reconnects, bytes_acked, counts, ticket = _sim_rows_once(
         ta,
         la,
         up_bytes=up_bytes,
@@ -724,7 +806,7 @@ def _sim_rows(
         jrows = np.where(jit > 0)[0]
         if jrows.size:
             wait[jrows] *= 1.0 + jit[jrows] * rng.random(jrows.size)
-        a2, t2, rc2, ba2, c2 = _sim_rows_once(
+        a2, t2, rc2, ba2, c2, tk2 = _sim_rows_once(
             ta.take(failed),
             la.take(failed),
             up_bytes=up_bytes[failed],
@@ -732,11 +814,14 @@ def _sim_rows(
             local_train_times=local_train_times[failed],
             rng=rng,
             connected=np.zeros(failed.size, bool),
+            ticket=ticket[failed],
+            progress=np.where(ra.resume[failed], bytes_acked[failed], 0),
         )
         t[failed] += wait + t2
         reconnects[failed] += rc2
         bytes_acked[failed] = ba2
         alive[failed] = a2
+        ticket[failed] = tk2
         for f in _TRACE_FIELDS:
             counts[f][failed] += c2[f]
     return alive, t, reconnects, bytes_acked, counts
@@ -751,36 +836,63 @@ def _sim_rows_once(
     local_train_times: np.ndarray,
     rng: np.random.Generator,
     connected: np.ndarray,
+    ticket: Optional[np.ndarray] = None,
+    progress: Optional[np.ndarray] = None,
 ):
     """One FL round ATTEMPT for a plane of rows with batched draws:
     handshake-if-needed -> download -> idle (keepalive/middlebox) ->
     reconnect-if-dead -> upload, each stage sampled for every row at once.
-    Returns (success, time, reconnects, bytes_acked, counts)."""
+
+    ``ticket`` [k] bool marks rows holding a 0-RTT session ticket from an
+    earlier attempt this round (``zero_rtt`` rows reconnect for free);
+    ``progress`` [k] int64 is the resume frontier in bytes (download acked
+    first, then upload) a resumed re-attempt continues from. Both default
+    to the fresh-attempt state (no ticket, zero frontier), under which the
+    stage masks and draw order are identical to the pre-reliability
+    pipeline. Returns (success, time, reconnects, bytes_acked, counts,
+    ticket_out) — ``bytes_acked`` is the cumulative frontier (full payload
+    on success, partial progress on failure)."""
     k = la.loss.shape[0]
     t = np.zeros(k)
     reconnects = np.zeros(k, np.int64)
     alive = np.ones(k, bool)
     counts = {name: np.zeros(k, np.int64) for name in _TRACE_FIELDS}
+    if ticket is None:
+        ticket = np.zeros(k, bool)
+    p0 = np.zeros(k, np.int64) if progress is None else np.asarray(progress, np.int64)
+    frontier = p0.copy()
 
-    idx = np.where(~connected)[0]
+    # 0-RTT resumption: zero_rtt rows holding a ticket reconnect for free
+    free = ~connected & ta.zero_rtt & ticket
+    reconnects[free] += 1
+    idx = np.where(~connected & ~free)[0]
     if idx.size:
         ok, ht, att = _grid_handshake(ta.take(idx), la.take(idx), rng)
         t[idx] += ht
         reconnects[idx] += 1
         alive[idx] &= ok
         counts["syn_attempts"][idx] += att
+    # first contact made (connected rows, or a successful handshake):
+    # the round now holds a session ticket
+    ticket = ticket | alive
 
-    idx = np.where(alive)[0]
+    d0 = np.minimum(p0, down_bytes)
+    down_rem = (down_bytes - d0).astype(np.int64)
+    idx = np.where(alive & ((p0 == 0) | (down_rem > 0)))[0]
     if idx.size:
-        ok, dt, stalls, rwnd = _grid_transfer(
-            ta.take(idx), la.take(idx), down_bytes[idx], rng
+        ok, dt, stalls, rwnd, ba = _grid_transfer(
+            ta.take(idx), la.take(idx), down_rem[idx], rng
         )
         t[idx] += dt
         alive[idx] &= ok
         counts["rto_stalls"][idx] += stalls
         counts["retrans_windows"][idx] += rwnd
+        frontier[idx] = d0[idx] + ba
 
-    idx = np.where(alive)[0]
+    # rows whose frontier already covers the download trained in a prior
+    # attempt: the resumed attempt is the upload tail only
+    pay_train = alive & ((p0 == 0) | (p0 < down_bytes))
+    idx = np.where(pay_train)[0]
     if idx.size:
         state, probes, pfails = _grid_idle(
             ta.take(idx), la.take(idx), local_train_times[idx], rng
@@ -803,24 +915,33 @@ def _sim_rows_once(
             t[silent] += stall
         need_hs = idx[state != 0]
         if need_hs.size:
+            # idle death implies first contact happened: zero_rtt rows
+            # reconnect via free 0-RTT resumption, no ladder draw
+            zr = ta.zero_rtt[need_hs]
+            reconnects[need_hs[zr]] += 1
+            need_hs = need_hs[~zr]
+        if need_hs.size:
             ok, ht, att = _grid_handshake(ta.take(need_hs), la.take(need_hs), rng)
             t[need_hs] += ht
             reconnects[need_hs] += 1
             alive[need_hs] &= ok
             counts["syn_attempts"][need_hs] += att
 
-    idx = np.where(alive)[0]
+    u0 = np.maximum(p0 - down_bytes, 0)
+    up_rem = (up_bytes - u0).astype(np.int64)
+    idx = np.where(alive & ((p0 == 0) | (up_rem > 0)))[0]
     if idx.size:
-        ok, ut, stalls, rwnd = _grid_transfer(
-            ta.take(idx), la.take(idx), up_bytes[idx], rng
+        ok, ut, stalls, rwnd, ba = _grid_transfer(
+            ta.take(idx), la.take(idx), up_rem[idx], rng
         )
         t[idx] += ut
         alive[idx] &= ok
         counts["rto_stalls"][idx] += stalls
         counts["retrans_windows"][idx] += rwnd
+        frontier[idx] = down_bytes[idx] + u0[idx] + ba
 
-    bytes_acked = np.where(alive, up_bytes + down_bytes, 0).astype(np.int64)
-    return alive, t, reconnects, bytes_acked, counts
+    bytes_acked = np.where(alive, up_bytes + down_bytes, frontier).astype(np.int64)
+    return alive, t, reconnects, bytes_acked, counts, ticket
 
 
 def sim_cohort_round(

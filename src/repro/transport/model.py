@@ -77,11 +77,13 @@ def handshake(tcp: TcpParams, link: LinkProfile) -> HandshakeResult:
     q = (1.0 - link.loss) ** 2  # SYN out + SYN-ACK back (ACK piggybacks)
 
     # attempt k is sent at k*syn_rto; viable iff its SYN-ACK can return
-    # within the budget window.
+    # within the budget window. A zero_rtt profile keeps the ladder but
+    # has no kernel budget death (QUIC-style 1-RTT handshake): every
+    # attempt is viable regardless of RTT — the 5 s OWD cliff vanishes.
     viable = [
         k
         for k in range(tcp.tcp_syn_retries + 1)
-        if k * tcp.syn_rto + rtt <= budget
+        if tcp.zero_rtt or k * tcp.syn_rto + rtt <= budget
     ]
     if not viable or q <= 0.0:
         return HandshakeResult(0.0, math.inf, 0, budget)
@@ -235,14 +237,20 @@ def client_round(
     idle = idle_phase(tcp, link, local_train_time)
     t += local_train_time
     detail["idle"] = idle
-    # silent death: pay the detection stall + a re-handshake before upload
-    hs2 = handshake(tcp, link)
-    extra = (
-        idle.p_silent_dead * (idle.detect_stall + hs2.expected_time)
-        + idle.p_detected_dead * hs2.expected_time
-    )
+    # silent death: pay the detection stall + a re-handshake before upload.
+    # A zero_rtt profile reconnects off the session ticket for free (the
+    # detection stall is still paid — silent drops are discovered on send).
     p_reconnect_needed = idle.p_silent_dead + idle.p_detected_dead
-    p_ok *= idle.p_alive + p_reconnect_needed * hs2.success_prob
+    if tcp.zero_rtt:
+        extra = idle.p_silent_dead * idle.detect_stall
+        p_ok *= idle.p_alive + p_reconnect_needed
+    else:
+        hs2 = handshake(tcp, link)
+        extra = (
+            idle.p_silent_dead * (idle.detect_stall + hs2.expected_time)
+            + idle.p_detected_dead * hs2.expected_time
+        )
+        p_ok *= idle.p_alive + p_reconnect_needed * hs2.success_prob
     t += extra
     reconnects += p_reconnect_needed
 
@@ -283,17 +291,43 @@ def retry_round(
     where attempt k's expected clock includes every prior attempt's
     failure time (approximated by its conditional completion time) plus
     the mean backoff ``retry.backoff(k) * (1 + jitter/2)``. Deterministic
-    expectations only — the DES remains the stochastic oracle."""
+    expectations only — the DES remains the stochastic oracle.
+
+    Reliability variants: a ``zero_rtt`` profile makes re-attempts
+    resume the round's session ticket for free (modeled as starting
+    connected). ``retry.resume`` models the resumed re-attempt with the
+    ½-frontier approximation: a (re)handshake plus half the exchange's
+    transfer time on average and NO local-train window (a failed attempt
+    is uniformly likely to die anywhere along the byte frontier, and a
+    frontier past the download has already trained)."""
     first = client_round(
         tcp, link, update_bytes=update_bytes,
         local_train_time=local_train_time, connected=connected,
         download_bytes=download_bytes,
     )
-    rea = client_round(
-        tcp, link, update_bytes=update_bytes,
-        local_train_time=local_train_time, connected=False,
-        download_bytes=download_bytes,
-    )
+    if retry.resume:
+        db = update_bytes if download_bytes is None else download_bytes
+        dn = transfer(tcp, link, db)
+        upx = transfer(tcp, link, update_bytes)
+        if tcp.zero_rtt:
+            hs_p, hs_t = 1.0, 0.0  # free 0-RTT resumption off the ticket
+        else:
+            hs = handshake(tcp, link)
+            hs_p, hs_t = hs.success_prob, hs.expected_time
+        p_re = hs_p * dn.success_prob * upx.success_prob
+        t_re = (hs_t if math.isfinite(hs_t) else 0.0) + 0.5 * (
+            (dn.expected_time if math.isfinite(dn.expected_time) else 0.0)
+            + (upx.expected_time if math.isfinite(upx.expected_time) else 0.0)
+        )
+        rea = ClientRoundOutcome(
+            p_re, t_re if p_re > 0 else math.inf, 1.0, {}
+        )
+    else:
+        rea = client_round(
+            tcp, link, update_bytes=update_bytes,
+            local_train_time=local_train_time, connected=tcp.zero_rtt,
+            download_bytes=download_bytes,
+        )
     attempt_t = rea.expected_time if math.isfinite(rea.expected_time) else 0.0
     first_t = first.expected_time if math.isfinite(first.expected_time) else 0.0
     mean_jit = 1.0 + 0.5 * retry.jitter

@@ -54,6 +54,15 @@ class RetryPolicy:
     max_backoff: float = 60.0  # s cap on any single wait
     jitter: float = 0.0  # uniform multiplicative spread on each wait
     deadline_cap: float = math.inf  # stop re-attempting past this round clock
+    # Resumable transfers: when True, a re-attempt continues the exchange
+    # from the failed attempt's acked-byte frontier (download first, then
+    # upload) instead of restarting from byte zero — application-level
+    # chunked transfer with durable chunk acks. A re-attempt whose
+    # frontier already covers the download also skips the local-train
+    # window (the model was fully received and trained on; only the
+    # upload tail is outstanding). ``resume=False`` reproduces the
+    # restart-from-zero ladder draw-for-draw.
+    resume: bool = False
 
     def __post_init__(self):
         if self.max_retries < 0:
@@ -62,6 +71,8 @@ class RetryPolicy:
             raise ValueError("backoff parameters must be non-negative")
         if self.backoff_factor < 1.0:
             raise ValueError("backoff_factor must be >= 1")
+        if self.deadline_cap < 0:
+            raise ValueError("deadline_cap must be non-negative")
 
     def backoff(self, attempt: int) -> float:
         """Deterministic wait before re-attempt ``attempt`` (1-based)."""
@@ -71,6 +82,18 @@ class RetryPolicy:
 
     def replace(self, **kw) -> "RetryPolicy":
         return dataclasses.replace(self, **kw)
+
+
+# Transport profiles a TcpParams can carry (§VI "advanced reliability
+# techniques"): "tcp_default"/"tcp_tuned" are plain TCP (the name only
+# documents provenance — behavior is entirely the sysctl fields);
+# "zero_rtt" models QUIC-style session resumption: the FIRST handshake a
+# round needs runs the same SYN-ladder mechanics but is never killed by
+# the handshake budget (a 1-RTT QUIC handshake has no kernel SYN-retry
+# death), and every LATER handshake in the same round (idle-death
+# reconnect, retry re-attempt after first contact) is a free 0-RTT
+# resumption off the session ticket.
+TRANSPORT_PROFILES = ("tcp_default", "tcp_tuned", "zero_rtt")
 
 
 @dataclass(frozen=True)
@@ -94,6 +117,41 @@ class TcpParams:
     min_rto: float = 0.2
     max_rto: float = 120.0
     mss: int = 1460  # bytes per segment
+    # --- reliability profile (see TRANSPORT_PROFILES) ---
+    profile: str = "tcp_default"
+
+    def __post_init__(self):
+        if self.profile not in TRANSPORT_PROFILES:
+            raise ValueError(
+                f"unknown transport profile {self.profile!r}; "
+                f"expected one of {TRANSPORT_PROFILES}"
+            )
+        if self.mss <= 0:
+            raise ValueError("mss must be > 0")
+        if self.window_bytes < self.mss:
+            raise ValueError(
+                f"window_bytes ({self.window_bytes}) must be >= mss "
+                f"({self.mss}): the AIMD window needs at least one segment"
+            )
+        for f in (
+            "tcp_keepalive_time", "tcp_keepalive_intvl", "syn_rto",
+            "initial_rto", "min_rto", "max_rto",
+        ):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be non-negative")
+        for f in (
+            "tcp_syn_retries", "tcp_synack_retries", "tcp_keepalive_probes",
+            "tcp_retries2",
+        ):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be non-negative")
+        if self.max_rto < self.min_rto:
+            raise ValueError("max_rto must be >= min_rto")
+
+    @property
+    def zero_rtt(self) -> bool:
+        """True when this profile models QUIC-style session resumption."""
+        return self.profile == "zero_rtt"
 
     @property
     def handshake_budget(self) -> float:
@@ -146,3 +204,24 @@ BIG_BUFFER = TcpParams(
     tcp_rmem=4 * 1024 * 1024,
     tcp_wmem=4 * 1024 * 1024,
 )
+
+
+def transport_profile(name: str, *, base: TcpParams | None = None) -> TcpParams:
+    """Resolve a profile name to a ``TcpParams``.
+
+    ``"tcp_default"`` / ``"tcp_tuned"`` return ``base`` (or the canonical
+    ``DEFAULT`` / ``TUNED_EDGE``) tagged with the profile name — plain TCP
+    either way. ``"zero_rtt"`` tags ``base`` (default: ``DEFAULT``) with
+    QUIC-style session resumption semantics; all sysctl-derived transfer
+    mechanics (AIMD, RTO, buffers) are kept from ``base`` — 0-RTT changes
+    only the (re)connection story, which is exactly the paper's 5 s OWD
+    cliff surface.
+    """
+    if name not in TRANSPORT_PROFILES:
+        raise ValueError(
+            f"unknown transport profile {name!r}; "
+            f"expected one of {TRANSPORT_PROFILES}"
+        )
+    if base is None:
+        base = TUNED_EDGE if name == "tcp_tuned" else DEFAULT
+    return base.replace(profile=name)

@@ -103,6 +103,7 @@ class TcpPlane(NamedTuple):
     max_rto: jax.Array
     mss: jax.Array
     wnd_max: jax.Array  # window_bytes // mss segments, >= 2
+    zero_rtt: jax.Array  # bool — QUIC-style session-resumption profile
 
     @classmethod
     def from_arrays(cls, ta: _TcpArrays) -> "TcpPlane":
@@ -122,6 +123,7 @@ class TcpPlane(NamedTuple):
             max_rto=f(ta.max_rto),
             mss=f(ta.mss),
             wnd_max=f(np.maximum(ta.window_bytes // ta.mss, 2)),
+            zero_rtt=jnp.asarray(ta.zero_rtt),
         )
 
 
@@ -159,6 +161,7 @@ class RetryPlane(NamedTuple):
     max_backoff: jax.Array
     jitter: jax.Array
     deadline_cap: jax.Array
+    resume: jax.Array  # bool — re-attempts continue from the acked frontier
 
     @classmethod
     def from_arrays(cls, ra: _RetryArrays) -> "RetryPlane":
@@ -170,6 +173,7 @@ class RetryPlane(NamedTuple):
             max_backoff=f(ra.max_backoff),
             jitter=f(ra.jitter),
             deadline_cap=f(ra.deadline_cap),
+            resume=jnp.asarray(np.asarray(ra.resume, bool)),
         )
 
 
@@ -261,15 +265,21 @@ def _binomial_exact_tails(u, z, n, p):
 def _plane_handshake(tp: TcpPlane, lp: LinkPlane, key, attempts: int):
     """SYN ladder, all attempts drawn at once ([k, A] like the host's
     ``_grid_handshake``). Returns (success, time, syn_attempts) for every
-    row; callers mask by need."""
+    row; callers mask by need. ``zero_rtt`` rows keep the same ladder
+    draws but are never killed by the handshake budget (a 1-RTT QUIC
+    handshake has no kernel SYN-retry death) — the ``no_budget | x``
+    masks are bitwise inert when every row is plain TCP."""
     k1, k2 = jr.split(key)
     a = jnp.arange(attempts, dtype=tp.syn_rto.dtype)[None, :]
     t_send = a * tp.syn_rto[:, None]
     rtt = _rtt(lp, k1, (attempts,))
     delivered = jr.uniform(k2, rtt.shape) < lp.surv2[:, None]
     budget = tp.handshake_budget[:, None]
-    allowed = (a <= tp.syn_retries[:, None].astype(t_send.dtype)) & (t_send <= budget)
-    ok = delivered & allowed & (t_send + rtt <= budget)
+    no_budget = tp.zero_rtt[:, None]
+    allowed = (a <= tp.syn_retries[:, None].astype(t_send.dtype)) & (
+        no_budget | (t_send <= budget)
+    )
+    ok = delivered & allowed & (no_budget | (t_send + rtt <= budget))
     success = ok.any(axis=1)
     first = jnp.argmax(ok, axis=1)
     t_first = jnp.take_along_axis(t_send + rtt, first[:, None], axis=1)[:, 0]
@@ -366,7 +376,11 @@ def _rto_backoff(tp: TcpPlane, lp: LinkPlane, u, stalled, rto):
 def _plane_transfer(tp: TcpPlane, lp: LinkPlane, nbytes, key, need):
     """AIMD window-by-window transfer as one lockstep while_loop
     (the device twin of ``_grid_transfer``). Returns (success, time,
-    rto_stalls, retrans_windows); rows outside ``need`` return zeros."""
+    rto_stalls, retrans_windows, acked_bytes); rows outside ``need``
+    return zeros. ``acked_bytes`` is the cumulatively-acked frontier —
+    ``nbytes`` on success, the surviving in-order bytes on failure (the
+    resume ladder's register; matches the host's failure accounting,
+    which excludes the fatal window)."""
     fdt = tp.initial_rto.dtype
     segs_total = jnp.ceil(jnp.maximum(nbytes, 1.0) / tp.mss)
     segs_total = jnp.maximum(segs_total, 1.0)
@@ -464,7 +478,18 @@ def _plane_transfer(tp: TcpPlane, lp: LinkPlane, nbytes, key, need):
             "iters": jnp.int32(0),
         },
     )
-    return out["success"], out["t"], out["rto_stalls"], out["retrans_windows"]
+    nb = jnp.broadcast_to(jnp.asarray(nbytes, fdt), lp.loss.shape)
+    acked_bytes = jnp.where(
+        out["success"], nb, jnp.minimum(out["acked"] * tp.mss, nb)
+    )
+    acked_bytes = jnp.where(need, acked_bytes, 0.0)
+    return (
+        out["success"],
+        out["t"],
+        out["rto_stalls"],
+        out["retrans_windows"],
+        acked_bytes,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("attempts", "n_retries"))
@@ -481,24 +506,35 @@ def _device_round(
     per-attempt backoff wait is the policy ladder (elementwise, static
     exponent per unrolled attempt) scaled by a masked uniform jitter draw —
     jitter=0 rows multiply by exactly 1, preserving the degenerate
-    host/device parity path."""
+    host/device parity path.
+
+    The reliability registers ride the ladder: ``ticket`` (0-RTT session
+    resumption) survives across attempts, and ``rp.resume`` rows feed the
+    failed attempt's acked frontier back in as the next attempt's
+    ``progress`` (restart-from-zero rows feed 0.0 — bitwise the
+    pre-resume ladder)."""
     keys = jr.split(key, n_retries + 1)
-    alive, t, reconnects, bytes_acked, counts = _device_attempt(
+    alive, t, reconnects, bytes_acked, counts, ticket = _device_attempt(
         tp, lp, up, down, ltt, connected, keys[0], attempts,
         jnp.ones_like(connected),
+        jnp.zeros_like(connected),
+        jnp.zeros_like(up),
     )
     for a in range(1, n_retries + 1):
         ka, kj = jr.split(keys[a])
         failed = ~alive & (a <= rp.max_retries) & (t < rp.deadline_cap)
         wait = jnp.minimum(rp.base * rp.factor ** (a - 1.0), rp.max_backoff)
         wait = wait * (1.0 + rp.jitter * jr.uniform(kj, wait.shape))
-        a2, t2, rc2, ba2, c2 = _device_attempt(
-            tp, lp, up, down, ltt, jnp.zeros_like(connected), ka, attempts, failed
+        prog = jnp.where(failed & rp.resume, bytes_acked, 0.0)
+        a2, t2, rc2, ba2, c2, tk2 = _device_attempt(
+            tp, lp, up, down, ltt, jnp.zeros_like(connected), ka, attempts,
+            failed, ticket, prog,
         )
         t = jnp.where(failed, t + wait + t2, t)
         reconnects = reconnects + jnp.where(failed, rc2, 0)
         bytes_acked = jnp.where(failed, ba2, bytes_acked)
         alive = jnp.where(failed, a2, alive)
+        ticket = tk2
         counts = {
             f: counts[f] + jnp.where(failed, c2[f], 0) for f in _TRACE_FIELDS
         }
@@ -506,32 +542,60 @@ def _device_round(
 
 
 def _device_attempt(
-    tp: TcpPlane, lp: LinkPlane, up, down, ltt, connected, key, attempts, participate
+    tp: TcpPlane, lp: LinkPlane, up, down, ltt, connected, key, attempts,
+    participate, ticket, progress,
 ):
     """One round ATTEMPT for a [k] row plane: handshake-if-needed ->
     download -> idle (keepalive/middlebox) -> reconnect-if-dead -> upload.
     Rows outside ``participate`` stay inert (the stage ``need`` masks keep
-    them out of every while_loop's active set)."""
+    them out of every while_loop's active set).
+
+    Reliability registers (the device twin of ``des._sim_rows_once``):
+    ``ticket`` — rows holding a session ticket; a ``zero_rtt`` row with a
+    ticket (re-)connects for free (reconnect counted, no ladder time).
+    ``progress`` — the acked-byte frontier of a prior resumed attempt
+    (0.0 restarts from zero). A frontier into the download shortens it;
+    a frontier past the download skips the local-train window entirely
+    (prior attempt already trained — only the upload tail is
+    outstanding). Every register op is a where-gate off all-False /
+    all-zero inputs, and the ``jr.split`` count is unchanged, so plain
+    restart-from-zero TCP rows reproduce the pre-resume program
+    bitwise. Returns the 6-tuple
+    (alive, t, reconnects, bytes_acked, counts, ticket)."""
     k_hs, k_dn, k_idle, k_re, k_up = jr.split(key, 5)
     zero_i = jnp.zeros_like(tp.retries2)
     t = jnp.zeros_like(tp.initial_rto)
     counts = {name: zero_i for name in _TRACE_FIELDS}
+    p0 = progress
+    fresh = p0 == 0.0
 
-    need = participate & ~connected
+    # A ticketed zero_rtt row resumes its session for free: no ladder
+    # draws consumed by the outcome (the unconditional _plane_handshake
+    # call below still burns the same keys — stream stability).
+    free = participate & ~connected & tp.zero_rtt & ticket
+    need = participate & ~connected & ~free
     ok, ht, att = _plane_handshake(tp, lp, k_hs, attempts)
     t = t + jnp.where(need, ht, 0.0)
-    reconnects = need.astype(jnp.int32)
+    reconnects = (need | free).astype(jnp.int32)
     alive = participate & (ok | ~need)
     counts["syn_attempts"] = jnp.where(need, att, 0)
+    ticket = ticket | alive  # first contact made -> round holds a ticket
 
-    ok, dt, stalls, rwnd = _plane_transfer(tp, lp, down, k_dn, alive)
+    d0 = jnp.minimum(p0, down)
+    down_rem = down - d0
+    need_dl = alive & (fresh | (down_rem > 0.0))
+    ok, dt, stalls, rwnd, ba = _plane_transfer(tp, lp, down_rem, k_dn, need_dl)
     t = t + dt
     counts["rto_stalls"] = counts["rto_stalls"] + stalls
     counts["retrans_windows"] = counts["retrans_windows"] + rwnd
-    alive = alive & ok
+    alive = alive & (ok | ~need_dl)
+    frontier = jnp.where(need_dl, d0 + ba, p0)
 
-    state, probes, pfails = _plane_idle(tp, lp, ltt, k_idle, alive)
-    t = t + jnp.where(alive, ltt, 0.0)
+    # Frontier past the download => the prior attempt already trained;
+    # this attempt is handshake + upload tail only.
+    pay_train = alive & (fresh | (p0 < down))
+    state, probes, pfails = _plane_idle(tp, lp, ltt, k_idle, pay_train)
+    t = t + jnp.where(pay_train, ltt, 0.0)
     counts["keepalive_probes"] = probes
     counts["keepalive_failures"] = pfails
     silent = alive & (state == 2)
@@ -543,21 +607,27 @@ def _device_attempt(
         60.0,
     )
     t = t + jnp.where(silent, stall, 0.0)
-    need_hs = alive & (state != 0)
+    dead_conn = alive & (state != 0)
+    free_re = dead_conn & tp.zero_rtt  # 0-RTT resumption off the ticket
+    need_hs = dead_conn & ~tp.zero_rtt
     ok, ht, att = _plane_handshake(tp, lp, k_re, attempts)
     t = t + jnp.where(need_hs, ht, 0.0)
-    reconnects = reconnects + need_hs
+    reconnects = reconnects + need_hs + free_re
     alive = alive & (ok | ~need_hs)
     counts["syn_attempts"] = counts["syn_attempts"] + jnp.where(need_hs, att, 0)
 
-    ok, ut, stalls, rwnd = _plane_transfer(tp, lp, up, k_up, alive)
+    u0 = jnp.maximum(p0 - down, 0.0)
+    up_rem = up - u0
+    need_ul = alive & (fresh | (up_rem > 0.0))
+    ok, ut, stalls, rwnd, ba = _plane_transfer(tp, lp, up_rem, k_up, need_ul)
     t = t + ut
     counts["rto_stalls"] = counts["rto_stalls"] + stalls
     counts["retrans_windows"] = counts["retrans_windows"] + rwnd
-    alive = alive & ok
+    alive = alive & (ok | ~need_ul)
+    frontier = jnp.where(need_ul, down + u0 + ba, frontier)
 
-    bytes_acked = jnp.where(alive, up + down, 0.0)
-    return alive, t, reconnects, bytes_acked, counts
+    bytes_acked = jnp.where(alive, up + down, frontier)
+    return alive, t, reconnects, bytes_acked, counts, ticket
 
 
 def device_sim_rows(

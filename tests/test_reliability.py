@@ -1,0 +1,335 @@
+"""Reliability-layer tests: resumable transfers (RetryPolicy.resume),
+0-RTT protocol profiles (TcpParams.profile="zero_rtt"), construction
+validation, partial-progress telemetry, and the delivery_events
+invariants (hypothesis-stub property coverage)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.server import FederatedServer, RoundRecord, ServerConfig, derive_rng
+from repro.transport import (
+    DEFAULT,
+    TRANSPORT_PROFILES,
+    TUNED_EDGE,
+    LinkProfile,
+    RetryPolicy,
+    TcpParams,
+    transport_profile,
+)
+from repro.transport import des, model
+from repro.transport.des import (
+    _LinkArrays,
+    _RetryArrays,
+    _TcpArrays,
+    _sim_client_attempt,
+    _sim_rows,
+    delivery_events,
+)
+
+ZR = transport_profile("zero_rtt")
+FAST = LinkProfile(name="fast", delay=0.0025, jitter=0.0, loss=0.0, rate_mbps=100.0)
+
+
+# ---------------------------------------------------------------------------
+# construction validation (satellite: fail loudly, not deep in sim_transfer)
+# ---------------------------------------------------------------------------
+
+
+def test_tcp_params_validation():
+    with pytest.raises(ValueError, match="mss"):
+        TcpParams(mss=0)
+    with pytest.raises(ValueError, match="window_bytes"):
+        TcpParams(tcp_rmem=1000, tcp_wmem=1000)  # < one mss segment
+    with pytest.raises(ValueError, match="syn_rto"):
+        TcpParams(syn_rto=-1.0)
+    with pytest.raises(ValueError, match="tcp_syn_retries"):
+        TcpParams(tcp_syn_retries=-1)
+    with pytest.raises(ValueError, match="max_rto"):
+        TcpParams(min_rto=5.0, max_rto=1.0)
+    with pytest.raises(ValueError, match="profile"):
+        TcpParams(profile="udp")
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="deadline_cap"):
+        RetryPolicy(deadline_cap=-1.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        RetryPolicy(base_backoff=-1.0)
+
+
+def test_transport_profile_factory():
+    assert transport_profile("tcp_tuned") == TUNED_EDGE.replace(profile="tcp_tuned")
+    assert transport_profile("tcp_default") == DEFAULT
+    assert ZR.zero_rtt and not DEFAULT.zero_rtt and not TUNED_EDGE.zero_rtt
+    # zero_rtt keeps the base's transfer mechanics, changes only the tag
+    assert ZR.replace(profile="tcp_default") == DEFAULT
+    with pytest.raises(ValueError, match="profile"):
+        transport_profile("quic")
+    cfg_ok = ServerConfig(transport_profile="zero_rtt")
+    assert cfg_ok.transport_profile == "zero_rtt"
+    with pytest.raises(ValueError, match="transport_profile"):
+        ServerConfig(transport_profile="bogus")
+
+
+# ---------------------------------------------------------------------------
+# 0-RTT semantics: the 5 s OWD cliff moves
+# ---------------------------------------------------------------------------
+
+
+def test_zero_rtt_survives_past_handshake_cliff():
+    """DEFAULT breaker-fails past 5 s OWD (budget 10.5 s < RTT); zero_rtt
+    keeps the same ladder but cannot die on the budget."""
+    far = LinkProfile(name="far", delay=8.0, jitter=0.0, loss=0.0, rate_mbps=100.0)
+    dead = des.sim_client_round(
+        DEFAULT, far, rng=np.random.default_rng(0), update_bytes=10_000,
+        local_train_time=1.0, connected=False,
+    )
+    alive = des.sim_client_round(
+        ZR, far, rng=np.random.default_rng(0), update_bytes=10_000,
+        local_train_time=1.0, connected=False,
+    )
+    assert not dead.success and dead.time == DEFAULT.handshake_budget
+    assert alive.success
+    # first contact is a full 1-RTT handshake: the RTT is still paid
+    assert alive.time > 2 * far.delay
+
+
+def test_zero_rtt_idle_reconnect_is_free():
+    """A silently-dropped connection (middlebox reap during local
+    training) re-handshakes for free under zero_rtt: the plain-TCP round
+    pays exactly one extra handshake RTT on the degenerate path."""
+    mbox = FAST.replace(middlebox_timeout=5.0)  # reaped during 10 s training
+    kw = dict(update_bytes=50_000, local_train_time=10.0, connected=False)
+    plain = des.sim_client_round(
+        DEFAULT, mbox, rng=np.random.default_rng(0), **kw
+    )
+    zr = des.sim_client_round(ZR, mbox, rng=np.random.default_rng(0), **kw)
+    assert plain.success and zr.success
+    assert plain.reconnects == zr.reconnects == 2
+    rtt = 2 * mbox.delay
+    assert plain.time - zr.time == pytest.approx(rtt, abs=1e-9)
+
+
+def test_zero_rtt_model_closed_forms():
+    far = LinkProfile(name="far", delay=8.0, jitter=0.0, loss=0.0, rate_mbps=100.0)
+    assert model.handshake(DEFAULT, far).success_prob == 0.0
+    hs = model.handshake(ZR, far)
+    assert hs.success_prob == 1.0
+    assert hs.attempts_viable == ZR.tcp_syn_retries + 1
+    out = model.client_round(
+        ZR, far, update_bytes=100_000, local_train_time=5.0, connected=False
+    )
+    assert out.p_complete > 0.9 and math.isfinite(out.expected_time)
+
+
+# ---------------------------------------------------------------------------
+# resume semantics: the frontier contract
+# ---------------------------------------------------------------------------
+
+
+def test_resume_frontier_skips_download_and_training():
+    """A re-attempt whose frontier covers the download skips both the
+    download and the local-train window: handshake + upload tail only
+    (exact on the degenerate path)."""
+    down, up, ltt = 400_000, 200_000, 30.0
+    full, _ = _sim_client_attempt(
+        DEFAULT, FAST, update_bytes=up, rng=np.random.default_rng(0),
+        local_train_time=ltt, connected=False, download_bytes=down,
+    )
+    tail, _ = _sim_client_attempt(
+        DEFAULT, FAST, update_bytes=up, rng=np.random.default_rng(0),
+        local_train_time=ltt, connected=False, download_bytes=down,
+        progress=down,
+    )
+    assert full.success and tail.success
+    # the tail attempt pays no training window and no download clock
+    assert tail.time < full.time - ltt + 1e-9
+    assert tail.bytes_acked == full.bytes_acked == up + down
+    # a frontier into the download shortens it but still trains
+    half, _ = _sim_client_attempt(
+        DEFAULT, FAST, update_bytes=up, rng=np.random.default_rng(0),
+        local_train_time=ltt, connected=False, download_bytes=down,
+        progress=down // 2,
+    )
+    assert half.success
+    assert tail.time < half.time < full.time
+
+
+def test_resume_dominates_restart_under_loss():
+    """At >=30-40% loss with a give-up-prone retries2, mid-transfer
+    deaths are common: resuming from the acked frontier delivers strictly
+    more often (and no slower) than restarting from byte zero."""
+    tcp = TUNED_EDGE.replace(tcp_retries2=5)
+    lossy = LinkProfile(name="lossy", delay=0.05, jitter=0.01, loss=0.4, rate_mbps=10.0)
+    kw = dict(update_bytes=2_000_000, local_train_time=1.0, connected=False)
+    n = 12
+    res = {}
+    for resume in (False, True):
+        rp = RetryPolicy(max_retries=6, resume=resume, max_backoff=4.0)
+        succ = times = 0.0
+        for s in range(n):
+            o = des.sim_client_round(
+                tcp, lossy, rng=np.random.default_rng(s), retry=rp, **kw
+            )
+            succ += o.success
+            times += o.time
+        res[resume] = (succ / n, times / n)
+    assert res[True][0] >= res[False][0]
+    assert res[True][0] > 0.8  # resume actually delivers here
+    # restart burns strictly more clock re-downloading/re-training
+    assert res[True][1] < res[False][1]
+
+
+def test_failed_exchanges_report_partial_frontier():
+    """CohortOutcome.bytes_acked carries the acked frontier of FAILED
+    exchanges (wasted-work telemetry), not zero."""
+    tcp = TUNED_EDGE.replace(tcp_retries2=4)
+    lossy = LinkProfile(name="lossy", delay=0.05, jitter=0.01, loss=0.45, rate_mbps=10.0)
+    out = des.sim_cohort_round(
+        tcp, [lossy] * 8, update_bytes=2_000_000,
+        local_train_times=np.full(8, 1.0), rng=np.random.default_rng(3),
+        connected=np.zeros(8, bool),
+    )
+    failed = ~out.success
+    assert failed.any()
+    assert (out.bytes_acked[failed] > 0).any()
+    assert (out.bytes_acked[failed] < 4_000_000).all()
+
+
+# ---------------------------------------------------------------------------
+# host <-> device parity on the new paths (degenerate = exact)
+# ---------------------------------------------------------------------------
+
+
+def test_device_parity_degenerate_zero_rtt_resume():
+    from repro.transport.plane import device_sim_rows, transport_plane_key
+
+    links = [
+        LinkProfile(name=f"l{d}", delay=d, jitter=0.0, loss=0.0, rate_mbps=50.0)
+        for d in (0.0025, 2.0, 8.0, 12.0)
+    ]
+    tcps = [ZR, ZR, ZR, DEFAULT]
+    ta = _TcpArrays.from_params(tcps)
+    la = _LinkArrays.from_links(links)
+    ra = _RetryArrays.broadcast(RetryPolicy(max_retries=2, resume=True), 4)
+    kw = dict(
+        up_bytes=np.full(4, 200_000, np.int64),
+        down_bytes=np.full(4, 400_000, np.int64),
+        local_train_times=np.full(4, 5.0),
+        connected=np.zeros(4, bool),
+    )
+    h = _sim_rows(ta, la, rng=derive_rng(0, 2, 0), retry=ra, **kw)
+    d = device_sim_rows(ta, la, key=transport_plane_key(0, 2, 0), retry=ra, **kw)
+    np.testing.assert_array_equal(h[0], np.asarray(d[0]))  # success
+    np.testing.assert_array_equal(h[2], np.asarray(d[2]))  # reconnects
+    np.testing.assert_allclose(np.asarray(d[1]), h[1], rtol=1e-4)  # clocks
+    np.testing.assert_allclose(np.asarray(d[3]), h[3], rtol=1e-4)  # bytes
+    # the zero_rtt rows actually survived the 8/12 s cliff rows
+    assert h[0][:3].all()
+    # and the plain-TCP row died on the budget with its retries exhausted
+    assert not h[0][3] and h[2][3] == 3
+
+
+def test_device_parity_distributional_resume():
+    """Stochastic rows: resume changes draw consumption, so host/device
+    agree distributionally — delivery rates within a binomial envelope."""
+    from repro.transport.plane import device_sim_rows, transport_plane_key
+
+    k = 64
+    tcp = TUNED_EDGE.replace(tcp_retries2=5)
+    lossy = LinkProfile(name="lossy", delay=0.05, jitter=0.01, loss=0.4, rate_mbps=10.0)
+    ta = _TcpArrays.from_params([tcp] * k)
+    la = _LinkArrays.from_links([lossy] * k)
+    ra = _RetryArrays.broadcast(RetryPolicy(max_retries=4, resume=True, max_backoff=4.0), k)
+    kw = dict(
+        up_bytes=np.full(k, 1_000_000, np.int64),
+        down_bytes=np.full(k, 1_000_000, np.int64),
+        local_train_times=np.full(k, 1.0),
+        connected=np.zeros(k, bool),
+    )
+    h = _sim_rows(ta, la, rng=derive_rng(7, 2, 0), retry=ra, **kw)
+    d = device_sim_rows(ta, la, key=transport_plane_key(7, 2, 0), retry=ra, **kw)
+    ph, pd = h[0].mean(), np.asarray(d[0]).mean()
+    sigma = math.sqrt(max(ph * (1 - ph), 0.25 / k) / k)
+    assert abs(ph - pd) <= 4 * sigma + 0.1
+
+
+# ---------------------------------------------------------------------------
+# telemetry: bytes flow into RoundRecord; checkpoint back-compat
+# ---------------------------------------------------------------------------
+
+
+def test_round_record_bytes_telemetry_and_backcompat():
+    rec = RoundRecord(
+        round_idx=0, t_start=0.0, t_end=0.0, selected=3, delivered=2,
+        failed_round=False, reconnects=0.0,
+    )
+    assert rec.bytes_acked == 0.0 and rec.wasted_bytes == 0.0
+    completed = np.array([True, False, True])
+    ba = np.array([100.0, 40.0, 100.0])
+    FederatedServer._record_bytes(None, rec, completed, ba)
+    assert rec.bytes_acked == 240.0
+    assert rec.wasted_bytes == 40.0  # the failed exchange's partial frontier
+    FederatedServer._record_bytes(None, rec, completed, None)  # optional
+    assert rec.bytes_acked == 240.0
+    # old checkpoints restore: RoundRecord(**r) without the new fields
+    old = dict(
+        round_idx=1, t_start=0.0, t_end=1.0, selected=2, delivered=2,
+        failed_round=False, reconnects=1.0,
+    )
+    assert RoundRecord(**old).bytes_acked == 0.0
+
+
+# ---------------------------------------------------------------------------
+# delivery_events invariants (hypothesis-stub property coverage)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    times=st.lists(st.floats(min_value=0.0, max_value=100.0), min_size=1, max_size=12),
+    deadline=st.floats(min_value=0.0, max_value=120.0),
+)
+@settings(max_examples=8)
+def test_delivery_events_deadline_half_open_and_sorted(times, deadline):
+    """An event exists iff its flow succeeded AND time <= deadline — the
+    same INCLUSIVE check the sync engine applies (ct <= round_deadline);
+    events come out sorted by landing time."""
+    success = np.ones(len(times), bool)
+    success[::3] = False  # some failures
+    ev = delivery_events(success, times, deadline=deadline)
+    kept = {j for _, j in ev}
+    for j, (s, t) in enumerate(zip(success, times)):
+        assert (j in kept) == (bool(s) and t <= deadline)
+    landed = [t for t, _ in ev]
+    assert landed == sorted(landed)
+
+
+@given(
+    t=st.floats(min_value=0.0, max_value=50.0),
+    n=st.integers(min_value=2, max_value=10),
+)
+@settings(max_examples=8)
+def test_delivery_events_tie_break_is_flow_index(t, n):
+    """Equal landing times sort by flow index — the deterministic
+    tie-break the async queue depends on."""
+    ev = delivery_events(np.ones(n, bool), np.full(n, t))
+    assert [j for _, j in ev] == list(range(n))
+
+
+@given(
+    times=st.lists(st.floats(min_value=0.0, max_value=100.0), min_size=1, max_size=10),
+    shift=st.floats(min_value=0.0, max_value=1000.0),
+)
+@settings(max_examples=8)
+def test_delivery_events_t_start_shift_is_exact(times, shift):
+    """t_start shifts every landing time by exactly t_start (float add,
+    no re-sorting surprises), and does not change which flows land."""
+    success = np.ones(len(times), bool)
+    base = delivery_events(success, times, t_start=0.0)
+    moved = delivery_events(success, times, t_start=shift)
+    assert [j for _, j in base] == [j for _, j in moved]
+    for (t0, _), (t1, _) in zip(base, moved):
+        assert t1 == shift + t0
