@@ -31,11 +31,16 @@ from repro.core import (
     EdgeClient,
     FederatedServer,
     GridPoint,
+    Population,
     ServerConfig,
     fedavg,
     run_fl_grid,
 )
-from repro.data import make_federated_mnist, synthetic_mnist
+from repro.data import (
+    federated_mnist_factory,
+    make_federated_mnist,
+    synthetic_mnist,
+)
 from repro.transport import DEFAULT, LAB, LinkProfile, RetryPolicy, TcpParams
 
 N_CLIENTS = 10
@@ -69,6 +74,18 @@ def _shared_shards(seed: int):
     if seed not in _SHARDS:
         _SHARDS[seed] = make_federated_mnist(N_CLIENTS, EXAMPLES_PER_CLIENT, seed=seed)
     return _SHARDS[seed]
+
+
+def _shared_shard_factory(seed: int):
+    """Partition FACTORY for point construction: the seed's shard list
+    materializes on first client touch, not when the sweep is declared,
+    and every point receives the exact same ``ClientDataset`` objects —
+    dataset-identity row coalescing and bitwise outputs are unchanged."""
+
+    def make(client_id: int):
+        return _shared_shards(seed)[int(client_id)]
+
+    return make
 
 
 def _shared_eval_data():
@@ -137,20 +154,45 @@ def _make_point(
     async_buffer_k: int = 1,
     async_concurrency: Optional[int] = None,
     staleness_alpha: float = 0.5,
+    population: Optional[int] = None,
+    population_factory=None,
+    max_cached_shards: Optional[int] = None,
+    state_plane: str = "dense",
+    clients_per_round: float = 1.0,
 ) -> GridPoint:
     # data_seed decouples shard contents from the RNG-stream seed: grids
     # with spawned per-point seeds keep ONE shared shard set (dataset
     # identity is what the grid engine coalesces training rows on)
-    shards = _shared_shards(seed if data_seed is None else data_seed)
-    # client_links: per-client LinkProfile overrides (None = base link),
-    # the lever for heterogeneous-cohort benchmarks (fast/slow halves)
-    clients = [
-        EdgeClient(
-            i, dataset=s,
-            link_override=None if client_links is None else client_links[i],
+    dseed = seed if data_seed is None else data_seed
+    if population is not None:
+        # population-scale point: a lazy client universe — nothing
+        # (clients, shards) materializes until a cohort is drawn. The
+        # default per-client factory generates shard c from its own
+        # SeedSequence((dseed, c)) stream; pass population_factory to
+        # override. client_links is a materialized O(population) list,
+        # so it is refused here — use a link_override_fn factory instead.
+        if client_links is not None:
+            raise ValueError(
+                "population points take link overrides via "
+                "Population(link_override_fn=...), not client_links"
+            )
+        clients = Population(
+            population,
+            population_factory
+            or federated_mnist_factory(EXAMPLES_PER_CLIENT, seed=dseed),
+            max_cached_shards=max_cached_shards or 256,
         )
-        for i, s in enumerate(shards)
-    ]
+    else:
+        # client_links: per-client LinkProfile overrides (None = base
+        # link), the lever for heterogeneous-cohort benchmarks
+        make = _shared_shard_factory(dseed)
+        clients = [
+            EdgeClient(
+                i, dataset=make(i),
+                link_override=None if client_links is None else client_links[i],
+            )
+            for i in range(N_CLIENTS)
+        ]
     return GridPoint(
         clients=clients,
         strategy=fedavg(min_fit=min_fit),
@@ -165,6 +207,7 @@ def _make_point(
             async_mode=async_mode, async_buffer_k=async_buffer_k,
             async_concurrency=async_concurrency,
             staleness_alpha=staleness_alpha,
+            state_plane=state_plane, clients_per_round=clients_per_round,
         ),
         compressor=_shared_compressor(compressor),
     )

@@ -62,6 +62,7 @@ def main() -> None:
         fig5_client_failure,
         fig678_tcp_params,
         kernel_bench,
+        population_bench,
         reliability_bench,
         resilience_bench,
         round_engine_bench,
@@ -88,6 +89,7 @@ def main() -> None:
         ("resilience_bench", resilience_bench.main),
         ("reliability_bench", reliability_bench.main),  # SecVI reliability frontier
         ("async_bench", async_bench.main),
+        ("population_bench", population_bench.main),  # million-client plane
     ]
 
     if only is not None:

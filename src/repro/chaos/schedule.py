@@ -135,6 +135,26 @@ class ChaosSchedule:
                     return False
         return True
 
+    def liveness_events(self) -> bool:
+        """True when any event can ever make ``alive()`` return False.
+
+        Population-scale engines use this to skip the O(population)
+        liveness scan: with no pod_kill and no full-loss partition on
+        the schedule, every client is alive at every t, so a cohort can
+        be drawn directly against the population size.  Conservative by
+        construction — it ignores time windows and target sets, so a
+        True answer only means "scan", never a wrong liveness result.
+        """
+        return any(
+            ev.kind == "pod_kill"
+            or (
+                ev.kind == "partition"
+                and ev.link_override is not None
+                and ev.link_override.get("loss", 0) >= 1.0
+            )
+            for ev in self.events
+        )
+
     def failed_fraction(self, t: float, n_clients: int) -> float:
         return sum(0 if self.alive(t, c) else 1 for c in range(n_clients)) / max(n_clients, 1)
 

@@ -1,7 +1,8 @@
 from repro.checkpoint.store import (
     CheckpointManager,
+    load_slot_maps,
     load_tree,
     save_tree,
 )
 
-__all__ = ["CheckpointManager", "save_tree", "load_tree"]
+__all__ = ["CheckpointManager", "save_tree", "load_tree", "load_slot_maps"]

@@ -43,8 +43,21 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_tree(directory: str, tree, *, metadata: Optional[Dict] = None) -> str:
-    """Atomic checkpoint write. Returns the final directory path."""
+def save_tree(
+    directory: str,
+    tree,
+    *,
+    metadata: Optional[Dict] = None,
+    slot_maps: Optional[Dict] = None,
+) -> str:
+    """Atomic checkpoint write. Returns the final directory path.
+
+    ``slot_maps`` is the manifest's first-class sparse-plane entry: for
+    each sparsely stored array node (e.g. a ``StatePlane`` with
+    ``storage="sparse"``), the list of population slots its saved rows
+    belong to, in row order. Dense checkpoints omit it; readers default
+    to ``{}`` (``load_slot_maps``), so pre-sparse checkpoints restore
+    unchanged."""
     os.makedirs(os.path.dirname(directory.rstrip("/")) or ".", exist_ok=True)
     flat = _flatten_with_paths(tree)
 
@@ -69,6 +82,10 @@ def save_tree(directory: str, tree, *, metadata: Optional[Dict] = None) -> str:
         "orig_dtypes": {k: o for k, (_, o) in converted.items()},
         "metadata": metadata or {},
     }
+    if slot_maps:
+        manifest["slot_maps"] = {
+            k: [int(s) for s in v] for k, v in slot_maps.items()
+        }
     parent = os.path.dirname(directory.rstrip("/")) or "."
     tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=parent)
     try:
@@ -121,6 +138,13 @@ def load_tree(directory: str, template) -> Tuple[Any, Dict]:
     return jax.tree_util.tree_unflatten(jax.tree.structure(template), ordered), manifest["metadata"]
 
 
+def load_slot_maps(directory: str) -> Dict:
+    """The manifest's slot-map entry; ``{}`` for dense (or pre-sparse)
+    checkpoints — the back-compat default."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        return json.load(f).get("slot_maps", {})
+
+
 class CheckpointManager:
     """Round/step-granular manager with a crash-safe LATEST pointer."""
 
@@ -132,9 +156,18 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:09d}")
 
-    def save(self, step: int, tree, *, metadata: Optional[Dict] = None) -> str:
+    def save(
+        self,
+        step: int,
+        tree,
+        *,
+        metadata: Optional[Dict] = None,
+        slot_maps: Optional[Dict] = None,
+    ) -> str:
         meta = dict(metadata or {}, step=step)
-        path = save_tree(self._step_dir(step), tree, metadata=meta)
+        path = save_tree(
+            self._step_dir(step), tree, metadata=meta, slot_maps=slot_maps
+        )
         # atomic LATEST update
         tmp = os.path.join(self.root, ".LATEST.tmp")
         with open(tmp, "w") as f:
@@ -163,6 +196,10 @@ class CheckpointManager:
         restore paths peek here first to build the array template."""
         with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
             return json.load(f)["metadata"]
+
+    def slot_maps(self, step: int) -> Dict:
+        """The step's manifest slot-map entry (``{}`` when dense)."""
+        return load_slot_maps(self._step_dir(step))
 
     def _gc(self):
         steps = sorted(

@@ -68,10 +68,14 @@ class Compressor:
     compress: Callable  # (delta, residual) -> (payload, new_residual)
     decompress: Callable  # payload -> delta (same tree structure as input)
     wire_bytes: Callable  # (tree_template) -> int
-    # Plane twin: (stacked_delta [R,...], residual_plane [N,...], slots [R])
-    #   -> (decompressed stacked [R,...], new residual_plane). One donated
-    # jit; ``slots`` maps plane rows to residual-plane rows (client slots).
-    # None => the server falls back to the sequential per-client loop.
+    # Plane twin: (stacked_delta [R,...], residual_buffer [K,...], rows [R])
+    #   -> (decompressed stacked [R,...], new residual_buffer). One donated
+    # jit; ``rows`` are PHYSICAL buffer rows. Under the dense StatePlane
+    # K == N_clients and rows == client slots (the PR-4 layout); under the
+    # sparse plane K is the compacted capacity and the caller maps slots
+    # to rows via ``StatePlane.rows_for`` first. The programs are
+    # index-agnostic either way. None => the server falls back to the
+    # sequential per-client loop.
     compress_plane: Optional[Callable] = None
     # Hashable semantics identity for provenance coalescing; () => opaque.
     fingerprint: tuple = ()
@@ -85,7 +89,11 @@ class Compressor:
 
 
 def init_residual_plane(template, n: int):
-    """Zero residual plane: one f32 row per client, template-shaped leaves."""
+    """Zero residual plane: one f32 row per client, template-shaped leaves.
+
+    This is the DENSE layout — ``repro.core.stateplane.StatePlane`` wraps
+    it (storage="dense") and adds the compacted sparse alternative; the
+    plane programs below consume either buffer unchanged."""
     return jax.tree.map(
         lambda l: jnp.zeros((n,) + l.shape, jnp.float32), template
     )

@@ -4,6 +4,8 @@ transport/chaos/tuning subpackages supply the network substrate."""
 
 from repro.core.client import EdgeClient, LocalTask, lm_task, mnist_cnn_task
 from repro.core.grid import GridPoint, GridResult, GridStats, run_fl_grid
+from repro.core.population import Population
+from repro.core.stateplane import StatePlane
 from repro.core.server import (
     FederatedServer,
     FitJob,
@@ -28,6 +30,8 @@ from repro.core.strategy import (
 __all__ = [
     "EdgeClient",
     "LocalTask",
+    "Population",
+    "StatePlane",
     "mnist_cnn_task",
     "lm_task",
     "FederatedServer",

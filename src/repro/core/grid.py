@@ -706,18 +706,24 @@ def run_fl_grid(
                     )
                     stats.compress_requested += 1
                     plane_fn = comp.compress_plane
-                    slots_j = jnp.asarray(slots, jnp.int32)
+                    plane = srv._ensure_residual_plane()
+                    # provenance (ckey) is keyed on SLOTS — stable client
+                    # identities — while the jitted gather/scatter take
+                    # physical buffer rows (identity under dense storage,
+                    # compacted under sparse; values are slot-determined
+                    # either way, so memo hits stay bitwise-safe)
+                    rows_j = jnp.asarray(
+                        plane.rows_for(np.asarray(slots, np.int32)), jnp.int32
+                    )
                     hit = comp_memo.get(ckey)
                     if hit is None:
-                        rows = plane_fn.gather_rows(
-                            srv._ensure_residual_plane(), slots_j
-                        )
+                        rows = plane_fn.gather_rows(plane.buffer, rows_j)
                         hit = plane_fn.compress_rows(stacked, rows)
                         comp_memo[ckey] = hit
                         stats.compress_computed += 1
                     x2_t, deq_t = hit
-                    srv._residual_plane = plane_fn.scatter_rows(
-                        x2_t, deq_t, srv._ensure_residual_plane(), slots_j
+                    plane.buffer = plane_fn.scatter_rows(
+                        x2_t, deq_t, plane.buffer, rows_j
                     )
                     stacked = plane_fn.finalize(stacked, deq_t)
                     precompressed = True
@@ -783,6 +789,7 @@ def run_fl_grid(
         # tokens on top
         arrays: Dict[str, Any] = {}
         meta_points = []
+        slot_maps: Dict[str, Any] = {}
         for i, srv in enumerate(servers):
             arrays[f"p{i:04d}"] = srv.checkpoint_arrays()
             mp = srv.checkpoint_meta()
@@ -791,6 +798,10 @@ def run_fl_grid(
             mp["params_key"] = int(params_keys[i])
             mp["res_key"] = int(res_keys[i])
             meta_points.append(mp)
+            # sparse planes publish their row->slot lists through the
+            # manifest's slot_maps entry, point-prefixed
+            for k, v in srv.checkpoint_slot_maps().items():
+                slot_maps[f"p{i:04d}/{k}"] = v
         mgr.save(
             next_round,
             arrays,
@@ -800,6 +811,7 @@ def run_fl_grid(
                 "stats": _jsonable(dataclasses.asdict(stats)),
                 "points": meta_points,
             },
+            slot_maps=slot_maps,
         )
 
     def _restore_checkpoint(mgr: CheckpointManager) -> int:
@@ -819,9 +831,19 @@ def run_fl_grid(
             for i, srv in enumerate(servers)
         }
         tree, _ = load_tree(mgr._step_dir(step), template)
+        all_slot_maps = mgr.slot_maps(step)
         for i, srv in enumerate(servers):
             mp = meta["points"][i]
-            srv.apply_checkpoint(mp, tree[f"p{i:04d}"])
+            prefix = f"p{i:04d}/"
+            srv.apply_checkpoint(
+                mp,
+                tree[f"p{i:04d}"],
+                slot_maps={
+                    k[len(prefix):]: v
+                    for k, v in all_slot_maps.items()
+                    if k.startswith(prefix)
+                },
+            )
             # equal saved keys across points => equal restored tokens, so
             # trajectory sharing survives the resume (params provenance,
             # residual provenance, AND the per-event dispatch tokens still

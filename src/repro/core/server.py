@@ -44,8 +44,10 @@ import numpy as np
 
 from repro.chaos import ChaosSchedule
 from repro.checkpoint.store import CheckpointManager
-from repro.compress import Compressor, init_residual_plane, none_compressor
+from repro.compress import Compressor, none_compressor
 from repro.core.client import EdgeClient, LocalTask
+from repro.core.population import Population
+from repro.core.stateplane import StatePlane
 from repro.core.strategy import Strategy
 from repro.transport import LinkProfile, TcpParams, client_round as analytic_round
 from repro.transport.des import (
@@ -277,8 +279,20 @@ class ServerConfig:
     # poisoning downstream state or raising. Detection is read-only, so
     # healthy runs are bitwise unaffected.
     quarantine: bool = True
+    # Per-client state storage (error-feedback residual plane today;
+    # FedDyn/SCAFFOLD per-client state tomorrow — see
+    # repro.core.stateplane). "dense" materializes one row per
+    # population slot ([N_clients, ...], the PR-4 layout, bitwise
+    # identical to every release before the StatePlane refactor).
+    # "sparse" keeps a compacted O(touched-clients) buffer keyed by a
+    # host slot map — required reading for million-client populations,
+    # bitwise equal to dense on every History observable (compressor
+    # planes consume row values, never row positions).
+    state_plane: str = "dense"
 
     def __post_init__(self):
+        if self.state_plane not in ("dense", "sparse"):
+            raise ValueError(f"unknown state_plane {self.state_plane!r}")
         # typos here would silently select the legacy stream discipline
         # and silently exclude points from the grid's transport hoist
         if self.engine not in ("default", "fused_transport"):
@@ -412,13 +426,28 @@ class FederatedServer:
         # BEFORE eval: the driver advances this point's provenance key so
         # the memoized eval caches on the post-flush trajectory
         self._async_prov_hook = None
-        # plane-resident error feedback: one f32 residual row per client,
-        # device-resident, gathered/scattered by slot inside the
-        # compressor's donated jit (lazily allocated on the first
-        # compressed stacked round). The sequential engine keeps using
-        # per-client EdgeClient.residual.
-        self._residual_plane = None
-        self._client_slot = {id(c): i for i, c in enumerate(self.clients)}
+        # plane-resident error feedback: a StatePlane of per-client f32
+        # residual rows (dense or sparse per config.state_plane),
+        # gathered/scattered inside the compressor's donated jit (lazily
+        # allocated on the first compressed stacked round). The
+        # sequential engine keeps using per-client EdgeClient.residual.
+        self._residual_plane: Optional[StatePlane] = None
+        # lazy population universe: client ids ARE state slots, and the
+        # O(population) id-keyed slot map is skipped entirely
+        self._population: Optional[Population] = (
+            clients if isinstance(clients, Population) else None
+        )
+        if self._population is not None and config.async_mode:
+            raise ValueError(
+                "Population requires the synchronous engines: the async "
+                "tick loop tracks per-client in-flight state by slot map; "
+                "pass a materialized client list for async_mode"
+            )
+        self._client_slot = (
+            None
+            if self._population is not None
+            else {id(c): i for i, c in enumerate(self.clients)}
+        )
 
     # ------------------------------------------------------------------
     @property
@@ -609,7 +638,7 @@ class FederatedServer:
             # the server also died while waiting out this failed round:
             # every client connection drops and the downtime extends the
             # wait when it outlasts the deadline window
-            for c in self.clients:
+            for c in self._state_clients():
                 c.connected = False
             self.sim_time = max(self.sim_time, crash[0] + crash[1])
         record.t_end = self.sim_time
@@ -633,7 +662,7 @@ class FederatedServer:
         t_crash, downtime = crash
         record.failed_round = True
         record.cause = "server_restart"
-        for c in self.clients:
+        for c in self._state_clients():
             c.connected = False
         self.sim_time = t_crash + downtime
         record.t_end = self.sim_time
@@ -699,21 +728,35 @@ class FederatedServer:
         t = self.sim_time
         if cfg.async_mode:
             return self._select_cohort_async(rnd, t)
-        live = [c for c in self.clients if self.chaos.alive(t, c.client_id)]
         n_total = len(self.clients)
+        if self._population is not None:
+            # lazy universe: live ids without materializing clients.
+            # live_ids=None is the O(1) fast path (no client-killing
+            # chaos => all n ids live, id order) — the draw below is
+            # then identical to the dense filter-then-choice.
+            live = None
+            live_ids = self._population.live_ids(self.chaos, t)
+            n_live = n_total if live_ids is None else len(live_ids)
+        else:
+            live = [c for c in self.clients if self.chaos.alive(t, c.client_id)]
+            n_live = len(live)
         quorum = self.strategy.quorum(n_total)
         record = RoundRecord(rnd, t, t, 0, 0, False, 0.0)
 
-        if len(live) < quorum:
+        if n_live < quorum:
             # Flower blocks until min_fit clients are available; account
             # the wait as a failed round of deadline length.
             self._fail_round(record, cause="no_live_quorum")
             return None
 
-        k = max(quorum, int(round(cfg.clients_per_round * len(live))))
-        k = min(int(round(k * max(cfg.over_provision, 1.0))), len(live))
-        idx = self.rng.choice(len(live), size=k, replace=False)
-        cohort = [live[i] for i in idx]
+        k = max(quorum, int(round(cfg.clients_per_round * n_live)))
+        k = min(int(round(k * max(cfg.over_provision, 1.0))), n_live)
+        idx = self.rng.choice(n_live, size=k, replace=False)
+        if live is None:
+            ids = idx if live_ids is None else live_ids[idx]
+            cohort = [self._population.client(int(cid)) for cid in ids]
+        else:
+            cohort = [live[i] for i in idx]
         record.selected = k
         record.selected_ids = [c.client_id for c in cohort]
 
@@ -954,16 +997,52 @@ class FederatedServer:
                 per_metrics.append(m)
         return stacked, deltas, weights, per_metrics
 
-    def _ensure_residual_plane(self):
+    def _ensure_residual_plane(self) -> StatePlane:
+        """The per-client residual StatePlane (dense or sparse per
+        ``config.state_plane``), lazily allocated on the first compressed
+        stacked round. Dense storage is row-for-row the legacy
+        ``init_residual_plane`` layout."""
         if self._residual_plane is None:
-            self._residual_plane = init_residual_plane(
-                self.global_params, len(self.clients)
+            self._residual_plane = StatePlane(
+                self.global_params,
+                len(self.clients),
+                storage=self.config.state_plane,
             )
         return self._residual_plane
 
     def client_slots(self, clients: List[EdgeClient]) -> List[int]:
-        """Residual-plane row indices for a list of (delivering) clients."""
+        """Population-wide state slots for a list of (delivering) clients.
+
+        Slots are stable client identities — list universes key them by
+        list position, lazy populations by client id — and they are what
+        grid compression provenance is keyed on. ``StatePlane.rows_for``
+        maps them to physical buffer rows at dispatch time."""
+        if self._client_slot is None:
+            return [c.client_id for c in clients]
         return [self._client_slot[id(c)] for c in clients]
+
+    def _state_clients(self) -> List[EdgeClient]:
+        """Clients that may hold non-default mutable state: the whole
+        list, or only the population's materialized clients (untouched
+        lazy clients are disconnected with zero counters by
+        construction, so O(population) sweeps skip them exactly)."""
+        if self._population is not None:
+            return self._population.active_clients()
+        return self.clients
+
+    def _client_at(self, slot: int) -> EdgeClient:
+        """The client occupying a state slot (checkpoint restore path)."""
+        if self._population is not None:
+            return self._population.peek(slot)
+        return self.clients[slot]
+
+    def _slotted_state_clients(self):
+        """(slot, client) pairs for clients that may hold per-client
+        state — the checkpoint protocol's iteration surface. O(active)
+        for populations, the full enumeration for lists."""
+        if self._population is not None:
+            return [(c.client_id, c) for c in self._population.active_clients()]
+        return list(enumerate(self.clients))
 
     def finish_round(
         self, job: FitJob, stacked, deltas, weights, per_metrics,
@@ -1037,10 +1116,12 @@ class FederatedServer:
         if self.compressor.name != "none" and not precompressed:
             plane_fn = self.compressor.compress_plane
             if stacked is not None and plane_fn is not None:
+                plane = self._ensure_residual_plane()
                 slots = np.asarray(self.client_slots(dclients), np.int32)
-                stacked, self._residual_plane = plane_fn(
-                    stacked, self._ensure_residual_plane(), slots
-                )
+                # physical buffer rows for the cohort's slots (identity
+                # under dense storage; compacted rows under sparse)
+                rows = plane.rows_for(slots)
+                stacked, plane.buffer = plane_fn(stacked, plane.buffer, rows)
             else:
                 if stacked is not None:
                     deltas = tree_unstack(stacked)
@@ -1309,12 +1390,15 @@ class FederatedServer:
         trees riding in the event queue and the flush buffer."""
         node: Dict[str, Any] = {"params": self.global_params}
         if self._residual_plane is not None:
-            node["residual"] = self._residual_plane
+            # dense: the full buffer, byte-identical to older releases;
+            # sparse: occupied rows compacted in row order (their slots
+            # ride the manifest slot_maps entry — checkpoint_slot_maps)
+            node["residual"] = self._residual_plane.state_arrays()
         if self.strategy.server_state is not None:
             node["server_state"] = self.strategy.server_state
         cres = {
             f"c{j}": c.residual
-            for j, c in enumerate(self.clients)
+            for j, c in self._slotted_state_clients()
             if c.residual is not None
         }
         if cres:
@@ -1368,20 +1452,46 @@ class FederatedServer:
                 if self._transport_rng is not None
                 else None
             ),
-            "clients": [
+            # list universes save every client (legacy layout); lazy
+            # populations save only touched clients, keyed by slot —
+            # untouched clients are default-state by construction
+            "clients": (
+                None
+                if self._population is not None
+                else [
+                    {
+                        "connected": bool(c.connected),
+                        "rounds_participated": int(c.rounds_participated),
+                        "bytes_sent": int(c.bytes_sent),
+                    }
+                    for c in self.clients
+                ]
+            ),
+            "clients_sparse": (
                 {
-                    "connected": bool(c.connected),
-                    "rounds_participated": int(c.rounds_participated),
-                    "bytes_sent": int(c.bytes_sent),
+                    str(j): {
+                        "connected": bool(c.connected),
+                        "rounds_participated": int(c.rounds_participated),
+                        "bytes_sent": int(c.bytes_sent),
+                    }
+                    for j, c in self._slotted_state_clients()
                 }
-                for c in self.clients
-            ],
+                if self._population is not None
+                else None
+            ),
             "rounds": [_jsonable(dataclasses.asdict(r)) for r in h.rounds],
             "eval_metrics": [_jsonable(m) for m in h.eval_metrics],
             "has_residual": self._residual_plane is not None,
+            "residual_plane": (
+                self._residual_plane.state_meta()
+                if self._residual_plane is not None
+                else None
+            ),
             "has_server_state": self.strategy.server_state is not None,
             "residual_clients": [
-                j for j, c in enumerate(self.clients) if c.residual is not None
+                j
+                for j, c in self._slotted_state_clients()
+                if c.residual is not None
             ],
             "compressor_state": _jsonable(comp_state),
             # async engine state: the staleness clock, the dispatch
@@ -1403,7 +1513,11 @@ class FederatedServer:
 
         node: Dict[str, Any] = {"params": self.global_params}
         if mp["has_residual"]:
-            node["residual"] = self._ensure_residual_plane()
+            # shape from the saved plane descriptor (checkpoints from
+            # before the StatePlane refactor carry no descriptor: dense)
+            node["residual"] = StatePlane.template_arrays(
+                self.global_params, len(self.clients), mp.get("residual_plane")
+            )
         if mp["has_server_state"]:
             node["server_state"] = self.strategy.server_opt.init(
                 self.global_params
@@ -1420,20 +1534,39 @@ class FederatedServer:
             node["evb"] = {f"b{n}": zeros for n in range(len(mp["buffer"]))}
         return node
 
-    def apply_checkpoint(self, mp: Dict[str, Any], tree: Dict[str, Any]) -> None:
+    def apply_checkpoint(
+        self,
+        mp: Dict[str, Any],
+        tree: Dict[str, Any],
+        slot_maps: Optional[Dict[str, Any]] = None,
+    ) -> None:
         """Restore the boundary state captured by ``checkpoint_arrays`` +
-        ``checkpoint_meta`` onto this (freshly constructed) server."""
+        ``checkpoint_meta`` onto this (freshly constructed) server.
+
+        ``slot_maps`` carries the manifest's slot-map entry (see
+        ``repro.checkpoint.store``): for sparse planes, the slot each
+        saved row belongs to. The restore is storage-agnostic — saved
+        rows scatter into whatever storage ``config.state_plane``
+        selects, so dense checkpoints resume into sparse runs and
+        vice versa, bitwise on every History observable."""
         import jax.numpy as jnp
 
         self.global_params = jax.tree.map(jnp.asarray, tree["params"])
         if mp["has_residual"]:
-            self._residual_plane = jax.tree.map(jnp.asarray, tree["residual"])
+            self._residual_plane = StatePlane.from_checkpoint(
+                self.global_params,
+                len(self.clients),
+                mp.get("residual_plane"),
+                tree["residual"],
+                storage=self.config.state_plane,
+                slots=(slot_maps or {}).get("residual"),
+            )
         if mp["has_server_state"]:
             self.strategy.server_state = jax.tree.map(
                 jnp.asarray, tree["server_state"]
             )
         for j in mp.get("residual_clients", []):
-            self.clients[j].residual = jax.tree.map(
+            self._client_at(j).residual = jax.tree.map(
                 jnp.asarray, tree["cres"][f"c{j}"]
             )
         self.sim_time = float(mp["sim_time"])
@@ -1447,7 +1580,13 @@ class FederatedServer:
         if mp["transport_rng_state"] is not None:
             self._transport_rng = np.random.default_rng()
             self._transport_rng.bit_generator.state = mp["transport_rng_state"]
-        for c, cs in zip(self.clients, mp["clients"]):
+        if mp.get("clients") is not None:
+            for c, cs in zip(self.clients, mp["clients"]):
+                c.connected = bool(cs["connected"])
+                c.rounds_participated = int(cs["rounds_participated"])
+                c.bytes_sent = int(cs["bytes_sent"])
+        for j, cs in (mp.get("clients_sparse") or {}).items():
+            c = self._client_at(int(j))
             c.connected = bool(cs["connected"])
             c.rounds_participated = int(cs["rounds_participated"])
             c.bytes_sent = int(cs["bytes_sent"])
@@ -1487,6 +1626,18 @@ class FederatedServer:
             ev["client_id"] for _, _, ev in self._event_queue
         }
 
+    def checkpoint_slot_maps(self) -> Dict[str, Any]:
+        """Manifest ``slot_maps`` entry: per-plane slot lists naming the
+        slot each saved row belongs to, in ``state_arrays`` row order.
+        Dense planes save nothing (row i IS slot i — the legacy layout),
+        so pre-sparse checkpoints stay byte-compatible."""
+        if (
+            self._residual_plane is not None
+            and self._residual_plane.storage == "sparse"
+        ):
+            return {"residual": self._residual_plane.slot_list()}
+        return {}
+
     def _save_checkpoint(self, mgr: CheckpointManager, next_round: int) -> None:
         mgr.save(
             next_round,
@@ -1496,6 +1647,7 @@ class FederatedServer:
                 "fingerprint": self._checkpoint_fingerprint(),
                 "point": self.checkpoint_meta(),
             },
+            slot_maps=self.checkpoint_slot_maps(),
         )
 
     def _restore_checkpoint(self, mgr: CheckpointManager) -> int:
@@ -1513,7 +1665,7 @@ class FederatedServer:
             )
         mp = meta["point"]
         tree, _ = load_tree(mgr._step_dir(step), self.checkpoint_template(mp))
-        self.apply_checkpoint(mp, tree)
+        self.apply_checkpoint(mp, tree, slot_maps=mgr.slot_maps(step))
         return int(meta["next_round"])
 
 

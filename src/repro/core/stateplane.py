@@ -1,0 +1,292 @@
+"""Sparse, slot-keyed per-client state plane.
+
+Per-client persistent state — error-feedback residuals today, FedDyn
+h-vectors and SCAFFOLD c-variates tomorrow — is a pytree of
+``[rows, ...]`` f32 device buffers plus a host map from *client slot*
+(a stable population-wide id) to *buffer row*.  Two storage modes share
+one API:
+
+- ``dense``: one row per population slot, slot == row.  This is exactly
+  the PR-4 ``init_residual_plane`` layout; ``rows_for`` is the identity,
+  so every existing jitted gather/scatter program (and its bitwise
+  output) is unchanged.
+- ``sparse``: a compacted buffer sized O(touched clients), not
+  O(population).  Rows are assigned on first touch from a free list,
+  capacity grows along a power-of-two ladder (bounded jit-cache
+  pressure: programs specialize on ``[capacity, ...]`` shapes), and
+  evicted rows are zeroed so a re-touched slot gathers fresh zeros —
+  the same value an untouched dense row holds.
+
+The bitwise-parity argument: compressor planes consume row *values*,
+never row *positions* (``gather_rows`` → per-row math → ``scatter_rows``
+round-trips through the same map), so a sparse plane that returns the
+same gathered values as the dense plane yields bit-identical
+``History`` observables regardless of how rows were compacted.
+
+Checkpoint protocol: ``state_arrays()`` emits the occupied rows
+compacted in row-assignment order, ``slot_list()`` names the slot each
+saved row belongs to (persisted through the manifest's ``slot_maps``
+entry — see ``repro.checkpoint.store``), and ``from_checkpoint``
+rebuilds under either storage mode: the slot→value mapping, not the
+physical layout, is the contract.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["StatePlane"]
+
+_MIN_CAPACITY = 8
+
+_STORAGES = ("dense", "sparse")
+
+
+def _next_pow2(n: int) -> int:
+    cap = _MIN_CAPACITY
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+def _zeros_rows(template: Any, rows: int) -> Any:
+    return jax.tree.map(
+        lambda leaf: jnp.zeros((rows,) + tuple(leaf.shape), jnp.float32), template
+    )
+
+
+class StatePlane:
+    """Slot-keyed per-client state buffer with dense and sparse storage."""
+
+    def __init__(
+        self,
+        template: Any,
+        n_slots: int,
+        *,
+        storage: str = "dense",
+        sharding: Any = None,
+    ):
+        if storage not in _STORAGES:
+            raise ValueError(f"storage must be one of {_STORAGES}, got {storage!r}")
+        self.template = template
+        self.n_slots = int(n_slots)
+        self.storage = storage
+        self.sharding = sharding
+        if storage == "dense":
+            self.capacity = self.n_slots
+            self.buffer = self._place(_zeros_rows(template, self.n_slots))
+            self._slot_to_row: Optional[Dict[int, int]] = None
+            self._row_slots: List[int] = []
+            self._free: List[int] = []
+        else:
+            self.capacity = 0
+            self.buffer: Any = None
+            self._slot_to_row = {}
+            self._row_slots = []  # row -> slot, -1 for free rows
+            self._free = []
+
+    # -- placement ---------------------------------------------------------
+
+    def _place(self, tree: Any) -> Any:
+        if self.sharding is None:
+            return tree
+        return jax.tree.map(lambda leaf: jax.device_put(leaf, self.sharding), tree)
+
+    # -- row management ----------------------------------------------------
+
+    @property
+    def occupancy(self) -> int:
+        """Number of slots holding materialized state."""
+        if self.storage == "dense":
+            return self.n_slots
+        return len(self._slot_to_row)
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by the backing buffer."""
+        if self.buffer is None:
+            return 0
+        return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.buffer))
+
+    def _grow(self, needed: int) -> None:
+        new_cap = _next_pow2(needed)
+        old = self.buffer
+        fresh = _zeros_rows(self.template, new_cap)
+        if old is not None:
+            fresh = jax.tree.map(lambda z, o: z.at[: o.shape[0]].set(o), fresh, old)
+        self.buffer = self._place(fresh)
+        self.capacity = new_cap
+
+    def rows_for(self, slots: Sequence[int], *, allocate: bool = True) -> np.ndarray:
+        """Map client slots to buffer rows (int32).
+
+        Dense storage is the identity.  Sparse storage assigns rows on
+        first touch (``allocate=True``) from the free list, growing the
+        buffer along the power-of-two ladder when full.  With
+        ``allocate=False`` an unmapped slot raises ``KeyError``.
+        """
+        slots = np.asarray(slots, np.int64)
+        if slots.size and (slots.min() < 0 or slots.max() >= self.n_slots):
+            raise IndexError(f"slot out of range [0, {self.n_slots})")
+        if self.storage == "dense":
+            return slots.astype(np.int32)
+        rows = np.empty(slots.shape, np.int32)
+        for i, s in enumerate(slots.tolist()):
+            row = self._slot_to_row.get(s)
+            if row is None:
+                if not allocate:
+                    raise KeyError(f"slot {s} has no materialized state")
+                if self._free:
+                    row = self._free.pop()
+                    self._row_slots[row] = s
+                else:
+                    row = len(self._row_slots)
+                    if row >= self.capacity:
+                        self._grow(row + 1)
+                    self._row_slots.append(s)
+                self._slot_to_row[s] = row
+            rows[i] = row
+        return rows
+
+    # -- gather / scatter --------------------------------------------------
+
+    def gather(self, slots: Sequence[int]) -> Any:
+        """Stacked ``[len(slots), ...]`` state for the given slots.
+
+        Untouched sparse slots gather zeros (a row is allocated for
+        them), matching the zero-initialized dense plane bitwise.
+        """
+        rows = jnp.asarray(self.rows_for(slots), jnp.int32)
+        return jax.tree.map(lambda leaf: jnp.take(leaf, rows, axis=0), self.buffer)
+
+    def scatter(self, slots: Sequence[int], rows_tree: Any) -> None:
+        """Write stacked per-slot state back into the buffer."""
+        rows = jnp.asarray(self.rows_for(slots), jnp.int32)
+        self.buffer = jax.tree.map(
+            lambda buf, new: buf.at[rows].set(new), self.buffer, rows_tree
+        )
+
+    def evict(self, slots: Sequence[int]) -> None:
+        """Drop materialized state for the given slots.
+
+        Freed rows are zeroed — a later gather of the same slot must
+        read zeros, exactly like a never-touched slot — and recycled
+        through the free list.  Dense storage zeroes in place (every
+        slot always owns its row).  Unknown sparse slots are ignored.
+        """
+        if self.storage == "dense":
+            rows = jnp.asarray(np.asarray(slots, np.int32))
+            if rows.size:
+                self.buffer = jax.tree.map(
+                    lambda buf: buf.at[rows].set(0.0), self.buffer
+                )
+            return
+        hit = [s for s in np.asarray(slots, np.int64).tolist() if s in self._slot_to_row]
+        if not hit:
+            return
+        rows = np.empty(len(hit), np.int32)
+        for i, s in enumerate(hit):
+            row = self._slot_to_row.pop(s)
+            self._row_slots[row] = -1
+            self._free.append(row)
+            rows[i] = row
+        self.buffer = jax.tree.map(
+            lambda buf: buf.at[jnp.asarray(rows)].set(0.0), self.buffer
+        )
+
+    # -- checkpoint protocol ----------------------------------------------
+
+    def slot_list(self) -> List[int]:
+        """Slots of the saved rows, in ``state_arrays`` row order."""
+        if self.storage == "dense":
+            return list(range(self.n_slots))
+        return [s for s in self._row_slots if s >= 0]
+
+    def state_arrays(self) -> Any:
+        """Array tree for the checkpoint store.
+
+        Dense: the full buffer, byte-identical to the pre-StatePlane
+        ``residual`` checkpoint node.  Sparse: occupied rows compacted
+        in row order (freed rows are not persisted).
+        """
+        if self.storage == "dense":
+            return self.buffer
+        occupied = [r for r, s in enumerate(self._row_slots) if s >= 0]
+        rows = jnp.asarray(np.asarray(occupied, np.int32))
+        return jax.tree.map(lambda leaf: jnp.take(leaf, rows, axis=0), self.buffer)
+
+    def state_meta(self) -> Dict[str, Any]:
+        """JSON-able plane descriptor for checkpoint metadata."""
+        if self.storage == "dense":
+            return {"storage": "dense"}
+        return {"storage": "sparse", "rows": len(self.slot_list())}
+
+    @staticmethod
+    def template_arrays(template: Any, n_slots: int, meta: Optional[Dict[str, Any]]) -> Any:
+        """Zero tree shaped like ``state_arrays`` for ``load_tree``."""
+        meta = meta or {"storage": "dense"}
+        if meta.get("storage", "dense") == "dense":
+            return _zeros_rows(template, int(n_slots))
+        return _zeros_rows(template, int(meta["rows"]))
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        template: Any,
+        n_slots: int,
+        meta: Optional[Dict[str, Any]],
+        arrays: Any,
+        *,
+        storage: str = "dense",
+        slots: Optional[Sequence[int]] = None,
+        sharding: Any = None,
+    ) -> "StatePlane":
+        """Rebuild a plane from checkpointed rows.
+
+        Storage-agnostic: the saved (slot, value) pairs are scattered
+        into a plane of the *configured* storage, so a dense checkpoint
+        restores into a sparse run and vice versa.  ``slots`` names the
+        slot of each saved row (from the manifest ``slot_maps`` entry);
+        ``None`` means the legacy dense layout where row i is slot i.
+        Restoring a dense checkpoint into sparse storage keeps only
+        rows with any non-zero state — zero rows are implicit.
+        """
+        meta = meta or {"storage": "dense"}
+        saved_dense = meta.get("storage", "dense") == "dense"
+        plane = cls(template, n_slots, storage=storage, sharding=sharding)
+        if saved_dense and storage == "dense":
+            plane.buffer = plane._place(
+                jax.tree.map(lambda leaf: jnp.asarray(leaf, jnp.float32), arrays)
+            )
+            return plane
+        if slots is None:
+            if not saved_dense:
+                raise ValueError("sparse checkpoint requires its slot list")
+            slots = list(range(n_slots))
+        slots = [int(s) for s in slots]
+        if saved_dense and storage == "sparse":
+            # Keep only rows carrying state; all-zero rows stay implicit.
+            host = [np.asarray(leaf) for leaf in jax.tree.leaves(arrays)]
+            keep = [
+                i
+                for i in range(len(slots))
+                if any(np.any(leaf[i]) for leaf in host)
+            ]
+            if keep:
+                idx = jnp.asarray(np.asarray(keep, np.int32))
+                rows_tree = jax.tree.map(
+                    lambda leaf: jnp.take(jnp.asarray(leaf, jnp.float32), idx, axis=0),
+                    arrays,
+                )
+                plane.scatter([slots[i] for i in keep], rows_tree)
+            return plane
+        if len(slots) > 0:
+            plane.scatter(
+                slots,
+                jax.tree.map(lambda leaf: jnp.asarray(leaf, jnp.float32), arrays),
+            )
+        return plane

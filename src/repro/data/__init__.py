@@ -1,8 +1,10 @@
 from repro.data.federated import (
     ClientDataset,
     dirichlet_partition,
+    federated_mnist_factory,
     iid_partition,
     make_federated_mnist,
+    shard_list_factory,
     synthetic_mnist,
 )
 from repro.data.tokens import synthetic_token_batches, token_batch_for
@@ -13,6 +15,8 @@ __all__ = [
     "dirichlet_partition",
     "synthetic_mnist",
     "make_federated_mnist",
+    "federated_mnist_factory",
+    "shard_list_factory",
     "synthetic_token_batches",
     "token_batch_for",
 ]

@@ -129,3 +129,69 @@ def make_federated_mnist(
     if iid:
         return iid_partition(data, n_clients, seed=seed)
     return dirichlet_partition(data, n_clients, alpha=alpha, seed=seed)
+
+
+def _client_rng(seed: int, client_id: int) -> np.random.Generator:
+    """Independent per-client stream: SeedSequence spawn keys give each
+    client a decorrelated generator addressable in O(1) — no global
+    stream position to advance through."""
+    return np.random.default_rng(
+        np.random.SeedSequence(entropy=seed, spawn_key=(int(client_id),))
+    )
+
+
+def federated_mnist_factory(
+    examples_per_client: int,
+    *,
+    iid: bool = True,
+    alpha: float = 0.5,
+    seed: int = 0,
+):
+    """Lazy per-client shard factory for population-scale runs.
+
+    Returns ``make(client_id) -> ClientDataset``: client c's shard is
+    generated on demand from its own ``SeedSequence((seed, c))`` stream —
+    O(examples_per_client) work and memory per call, zero
+    O(population) setup. Deterministic: the same (seed, client_id)
+    always yields the same shard, which is what lets ``Population``'s
+    LRU drop and re-materialize shards freely and what makes
+    kill-and-resume runs bitwise reproducible.
+
+    ``iid=False`` draws each client's label distribution from a
+    per-client Dirichlet(alpha) — label skew without a global pool.
+    Note the shards are distributionally, not sample-wise, equal to
+    ``make_federated_mnist``'s (which permutes ONE global pool and is
+    inherently O(population)); dense-vs-sparse parity gates compare
+    engines on identical data, not the two generators on each other.
+    """
+    examples_per_client = int(examples_per_client)
+    protos = _prototypes()
+
+    def make(client_id: int) -> ClientDataset:
+        rng = _client_rng(seed, client_id)
+        n = examples_per_client
+        if iid:
+            labels = rng.integers(0, 10, size=n).astype(np.int32)
+        else:
+            props = rng.dirichlet([alpha] * 10)
+            labels = rng.choice(10, size=n, p=props).astype(np.int32)
+        scale = rng.uniform(0.35, 0.75, (n, 1, 1)).astype(np.float32)
+        images = protos[labels] * scale + rng.normal(
+            0, 0.45, (n, 28, 28)
+        ).astype(np.float32)
+        images = np.clip(images, 0.0, 1.0)[..., None].astype(np.float32)
+        return ClientDataset(int(client_id), images, labels)
+
+    return make
+
+
+def shard_list_factory(shards: List[ClientDataset]):
+    """Adapt a materialized shard list into the factory protocol —
+    small sweeps hand ``Population`` (or point builders) the exact same
+    ``ClientDataset`` objects a list-universe run would see, keeping
+    dense-vs-sparse comparisons on identical data."""
+
+    def make(client_id: int) -> ClientDataset:
+        return shards[int(client_id)]
+
+    return make

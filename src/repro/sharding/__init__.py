@@ -6,6 +6,7 @@ from repro.sharding.rules import (
     input_shardings,
     param_shardings,
     spec_for_leaf,
+    state_plane_sharding,
 )
 
 __all__ = [
@@ -14,6 +15,7 @@ __all__ = [
     "cache_shardings",
     "input_shardings",
     "batch_spec",
+    "state_plane_sharding",
     "PRIORITY",
     "CANDIDATES",
 ]

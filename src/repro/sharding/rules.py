@@ -139,6 +139,17 @@ def batch_spec(mesh, batch_size: int, *, include_pod: bool = True) -> P:
     return None
 
 
+def state_plane_sharding(mesh: Mesh, *, axis: str = "data") -> NamedSharding:
+    """Row sharding for a per-client state plane's compacted buffer.
+
+    ``repro.core.stateplane.StatePlane`` buffers are ``[rows, ...]`` with
+    one row per touched client — the natural shard axis is the leading
+    row dim (rows are independent; gather/scatter address them by index).
+    Trailing dims replicate. The plane's power-of-two capacity ladder
+    keeps row counts divisible by any power-of-two mesh axis."""
+    return NamedSharding(mesh, P(axis))
+
+
 def input_shardings(input_specs_dict, mesh, *, include_pod: bool = True):
     """Shard every model input on its leading batch dim."""
 

@@ -1,0 +1,459 @@
+"""Population plane tests: StatePlane slot-map invariants (property-based),
+dense-vs-sparse BITWISE parity across engines and compressors, the lazy
+Population universe (materialization, LRU, liveness fast path, chaos
+parity), checkpoint row round-trips across storage modes, the sharding
+hook, and the O(cohort) memory regression gate."""
+
+import os
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.chaos import ChaosSchedule, client_failure_schedule
+from repro.compress import bf16_compressor, int8_compressor, topk_compressor
+from repro.core import (
+    EdgeClient,
+    FederatedServer,
+    Population,
+    ServerConfig,
+    StatePlane,
+    fedavg,
+    mnist_cnn_task,
+)
+from repro.data import (
+    federated_mnist_factory,
+    make_federated_mnist,
+    shard_list_factory,
+    synthetic_mnist,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import state_plane_sharding
+from repro.transport import DEFAULT, LAB
+
+TASK = mnist_cnn_task()
+SHARDS = make_federated_mnist(8, 64, seed=0)
+EVAL = synthetic_mnist(200, seed=77)
+
+TEMPLATE = {
+    "w": jnp.zeros((3, 2), jnp.float32),
+    "b": jnp.zeros((5,), jnp.float32),
+}
+
+
+def _rows_tree(rng, n):
+    return {
+        "w": jnp.asarray(rng.normal(size=(n, 3, 2)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32)),
+    }
+
+
+def _tree_rows_equal(tree, i, ref_row):
+    return all(
+        np.array_equal(np.asarray(tree[k][i]), np.asarray(ref_row[k]))
+        for k in tree
+    )
+
+
+def _zero_row(tree, i):
+    return all(not np.any(np.asarray(tree[k][i])) for k in tree)
+
+
+# ---------------------------------------------------------------------------
+# StatePlane slot-map invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None)
+@given(
+    cohorts=st.lists(
+        st.lists(st.integers(0, 63), min_size=1, max_size=12),
+        min_size=1,
+        max_size=8,
+    ),
+    seed=st.integers(0, 2**16),
+)
+def test_gather_scatter_identity(cohorts, seed):
+    """gather∘scatter identity under arbitrary cohort sequences: every
+    slot gathers exactly the last rows scattered to it, untouched slots
+    gather zeros, and the host reference map never disagrees."""
+    rng = np.random.default_rng(seed)
+    plane = StatePlane(TEMPLATE, 64, storage="sparse")
+    ref = {}
+    for cohort in cohorts:
+        slots = sorted(set(cohort))  # engines never pass duplicate slots
+        rows = _rows_tree(rng, len(slots))
+        plane.scatter(slots, rows)
+        for i, s in enumerate(slots):
+            ref[s] = {k: rows[k][i] for k in rows}
+    got = plane.gather(sorted(ref))
+    for i, s in enumerate(sorted(ref)):
+        assert _tree_rows_equal(got, i, ref[s]), s
+    untouched = [s for s in range(64) if s not in ref][:4]
+    if untouched:
+        z = plane.gather(untouched)
+        for i in range(len(untouched)):
+            assert _zero_row(z, i)
+    assert plane.occupancy == len(ref) + len(untouched)
+
+
+@settings(deadline=None)
+@given(
+    ops=st.lists(
+        st.builds(
+            lambda kind, slots: (kind, slots),
+            kind=st.sampled_from(["touch", "evict"]),
+            slots=st.lists(st.integers(0, 31), min_size=1, max_size=6),
+        ),
+        min_size=1,
+        max_size=12,
+    ),
+    seed=st.integers(0, 2**16),
+)
+def test_compaction_stability(ops, seed):
+    """Compaction stays consistent under arbitrary touch/evict sequences:
+    occupancy tracks the live slot set, capacity is a power of two >=
+    occupancy, evicted slots re-gather zeros (rows are zeroed before
+    reuse), and surviving slots keep their values bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    plane = StatePlane(TEMPLATE, 32, storage="sparse")
+    ref = {}
+    for kind, slots in ops:
+        slots = sorted(set(slots))
+        if kind == "touch":
+            rows = _rows_tree(rng, len(slots))
+            plane.scatter(slots, rows)
+            for i, s in enumerate(slots):
+                ref[s] = {k: rows[k][i] for k in rows}
+        else:
+            plane.evict(slots)
+            for s in slots:
+                ref.pop(s, None)
+        assert plane.occupancy == len(ref)
+        cap = plane.capacity
+        assert cap >= plane.occupancy
+        assert cap == 0 or (cap & (cap - 1)) == 0, cap
+    for s in sorted(ref):
+        got = plane.gather([s])
+        assert _tree_rows_equal(got, 0, ref[s]), s
+    dead = [s for s in range(32) if s not in ref][:3]
+    if dead:
+        z = plane.gather(dead)
+        for i in range(len(dead)):
+            assert _zero_row(z, i)
+
+
+def test_growth_pow2_ladder_and_free_list_reuse():
+    """Capacity grows along the power-of-two ladder (bounded jit-cache
+    pressure) and eviction recycles rows instead of growing."""
+    plane = StatePlane(TEMPLATE, 1024, storage="sparse")
+    caps = []
+    for s in range(0, 100, 10):
+        plane.rows_for([s])
+        caps.append(plane.capacity)
+    assert all(c and (c & (c - 1)) == 0 for c in caps)
+    assert caps == sorted(caps)
+    assert plane.capacity == 16  # 10 slots -> next pow2
+    # evict 5, touch 5 fresh: free rows are reused, no growth
+    plane.evict(list(range(0, 50, 10)))
+    plane.rows_for([500, 501, 502, 503, 504])
+    assert plane.capacity == 16
+    assert plane.occupancy == 10
+
+
+def test_dense_storage_is_identity():
+    """Dense storage: rows ARE slots (the legacy layout, bitwise)."""
+    plane = StatePlane(TEMPLATE, 16, storage="dense")
+    assert plane.rows_for([3, 9, 0]).tolist() == [3, 9, 0]
+    assert plane.occupancy == 16
+    assert plane.slot_list() == list(range(16))
+    rng = np.random.default_rng(0)
+    rows = _rows_tree(rng, 2)
+    plane.scatter([5, 11], rows)
+    got = plane.gather([5, 11])
+    for i in range(2):
+        assert _tree_rows_equal(got, i, {k: rows[k][i] for k in rows})
+
+
+@pytest.mark.parametrize("saved,restored", [
+    ("dense", "dense"), ("dense", "sparse"),
+    ("sparse", "dense"), ("sparse", "sparse"),
+])
+def test_checkpoint_roundtrip_cross_storage(saved, restored):
+    """state_arrays/slot_list round-trip through from_checkpoint under
+    every storage combination: the (slot, value) mapping is the contract,
+    not the physical layout."""
+    rng = np.random.default_rng(3)
+    src = StatePlane(TEMPLATE, 24, storage=saved)
+    slots = [2, 7, 19]
+    rows = _rows_tree(rng, len(slots))
+    src.scatter(slots, rows)
+    plane = StatePlane.from_checkpoint(
+        TEMPLATE, 24, src.state_meta(), src.state_arrays(),
+        storage=restored, slots=src.slot_list(),
+    )
+    assert plane.storage == restored
+    got = plane.gather(slots)
+    for i in range(len(slots)):
+        assert _tree_rows_equal(got, i, {k: rows[k][i] for k in rows})
+    z = plane.gather([0, 23])
+    assert _zero_row(z, 0) and _zero_row(z, 1)
+    if restored == "sparse":
+        # dense saves scatter only rows carrying state
+        assert plane.occupancy <= len(slots) + 2
+
+
+def test_state_plane_sharding_hook():
+    """A sharded sparse plane places its buffer under the mesh sharding
+    and stays value-identical to the unsharded plane."""
+    mesh = make_host_mesh()
+    sh = state_plane_sharding(mesh)
+    rng = np.random.default_rng(1)
+    a = StatePlane(TEMPLATE, 64, storage="sparse")
+    b = StatePlane(TEMPLATE, 64, storage="sparse", sharding=sh)
+    slots = [1, 8, 40]
+    rows = _rows_tree(rng, len(slots))
+    a.scatter(slots, rows)
+    b.scatter(slots, rows)
+    for k in TEMPLATE:
+        assert np.array_equal(np.asarray(a.buffer[k]), np.asarray(b.buffer[k]))
+    ga, gb = a.gather(slots), b.gather(slots)
+    for k in TEMPLATE:
+        assert np.array_equal(np.asarray(ga[k]), np.asarray(gb[k]))
+
+
+# ---------------------------------------------------------------------------
+# dense-vs-sparse bitwise engine parity (N <= 64)
+# ---------------------------------------------------------------------------
+
+ENGINES = {
+    "sequential": dict(batched=False),
+    "batched": dict(batched=True),
+    "fused_transport": dict(
+        batched=True, stochastic=True, engine="fused_transport"
+    ),
+}
+
+COMPRESSORS = {
+    "topk": lambda: topk_compressor(0.1),
+    "int8": int8_compressor,
+    "bf16": bf16_compressor,
+}
+
+
+def _run_universe(clients, comp, state_plane, **cfg_kw):
+    cfg_kw.setdefault("rounds", 3)
+    cfg_kw.setdefault("local_steps", 2)
+    cfg_kw.setdefault("seed", 0)
+    cfg_kw.setdefault("clients_per_round", 0.5)
+    srv = FederatedServer(
+        TASK, clients, fedavg(min_fit=0.5), tcp=DEFAULT,
+        chaos=ChaosSchedule(LAB),
+        config=ServerConfig(state_plane=state_plane, **cfg_kw),
+        compressor=comp, eval_data=EVAL,
+    )
+    return srv.run(), srv
+
+
+def _mk_clients():
+    return [EdgeClient(i, dataset=s) for i, s in enumerate(SHARDS)]
+
+
+def _assert_bitwise(ha, hb):
+    sa, sb = ha.summary(), hb.summary()
+    for k in sa:
+        va, vb = sa[k], sb[k]
+        assert va == vb or (va != va and vb != vb), (k, sa, sb)
+    assert len(ha.rounds) == len(hb.rounds)
+    for ra, rb in zip(ha.rounds, hb.rounds):
+        assert (
+            ra.round_idx, ra.t_start, ra.t_end, ra.selected_ids,
+            ra.delivered, ra.failed_round, ra.reconnects, ra.cause,
+        ) == (
+            rb.round_idx, rb.t_start, rb.t_end, rb.selected_ids,
+            rb.delivered, rb.failed_round, rb.reconnects, rb.cause,
+        )
+    assert ha.eval_metrics == hb.eval_metrics
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+@pytest.mark.parametrize("comp", sorted(COMPRESSORS))
+def test_dense_vs_sparse_bitwise(engine, comp):
+    """History.summary(), every per-round record, AND the eval trace are
+    bitwise identical between dense and sparse state planes, per engine x
+    compressor."""
+    kw = ENGINES[engine]
+    h_dense, _ = _run_universe(_mk_clients(), COMPRESSORS[comp](), "dense", **kw)
+    h_sparse, srv = _run_universe(
+        _mk_clients(), COMPRESSORS[comp](), "sparse", **kw
+    )
+    _assert_bitwise(h_dense, h_sparse)
+    if kw.get("batched") and srv._residual_plane is not None:
+        plane = srv._residual_plane
+        assert plane.storage == "sparse"
+        assert plane.occupancy <= len(SHARDS)
+        assert plane.capacity <= 8  # compacted, not O(population)-padded
+
+
+def test_population_universe_bitwise_vs_list():
+    """A lazy Population over the SAME shards reproduces the list
+    universe bitwise (batched engine, topk), while materializing only
+    touched clients."""
+    h_list, _ = _run_universe(_mk_clients(), topk_compressor(0.1), "dense")
+    pop = Population(len(SHARDS), shard_list_factory(SHARDS))
+    h_pop, srv = _run_universe(pop, topk_compressor(0.1), "sparse")
+    _assert_bitwise(h_list, h_pop)
+    assert pop.materialized <= len(SHARDS)
+
+
+def test_population_with_client_chaos_bitwise():
+    """With pod-kill chaos the liveness fast path is off; the O(n) scan
+    draws the same cohorts as the dense filter — histories stay bitwise."""
+    def chaos():
+        return ChaosSchedule(LAB).add(
+            client_failure_schedule(len(SHARDS), 0.25, seed=3)
+        )
+
+    def run(clients, plane):
+        srv = FederatedServer(
+            TASK, clients, fedavg(min_fit=0.25), tcp=DEFAULT, chaos=chaos(),
+            config=ServerConfig(
+                rounds=3, local_steps=2, seed=0, batched=True,
+                clients_per_round=0.5, state_plane=plane,
+            ),
+            compressor=topk_compressor(0.1), eval_data=EVAL,
+        )
+        return srv.run()
+
+    h_list = run(_mk_clients(), "dense")
+    h_pop = run(Population(len(SHARDS), shard_list_factory(SHARDS)), "sparse")
+    _assert_bitwise(h_list, h_pop)
+
+
+# ---------------------------------------------------------------------------
+# Population universe mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_population_lazy_materialization_counts():
+    calls = []
+
+    def factory(cid):
+        calls.append(cid)
+        return SHARDS[cid % len(SHARDS)]
+
+    pop = Population(1000, factory)
+    assert len(pop) == 1000
+    c = pop.client(7)
+    assert c.client_id == 7 and c.dataset is not None
+    assert pop.client(7) is c  # persistent object, one factory call
+    assert calls == [7]
+    assert pop.materialized == 1
+    assert pop.peek(900).dataset is None  # peek never builds shards
+    assert calls == [7]
+
+
+def test_population_iteration_raises():
+    pop = Population(10, shard_list_factory(SHARDS))
+    with pytest.raises(TypeError, match="lazy"):
+        list(pop)
+
+
+def test_population_lru_eviction_and_redeterminism():
+    factory = federated_mnist_factory(32, seed=5)
+    pop = Population(100, factory, max_cached_shards=4)
+    first = np.asarray(pop.client(0).dataset.images)
+    for cid in range(1, 10):
+        pop.client(cid)
+    assert pop.cached_shards <= 4
+    assert pop.client(0) is pop.peek(0)
+    again = np.asarray(pop.client(0).dataset.images)  # re-materialized
+    assert np.array_equal(first, again)  # factory is deterministic
+    assert pop.shards_built >= 11  # 10 distinct + at least 1 rebuild
+
+
+def test_population_live_ids_fast_path():
+    pop = Population(50, shard_list_factory(SHARDS))
+    assert pop.live_ids(ChaosSchedule(LAB), 0.0) is None  # O(1): all live
+    chaos = ChaosSchedule(LAB).add(client_failure_schedule(50, 0.2, seed=1))
+    ids = pop.live_ids(chaos, 0.0)
+    assert ids is not None
+    expected = [c for c in range(50) if chaos.alive(0.0, c)]
+    assert ids.tolist() == expected
+
+
+def test_population_rejects_async_mode():
+    pop = Population(10, shard_list_factory(SHARDS))
+    with pytest.raises(ValueError, match="synchronous"):
+        FederatedServer(
+            TASK, pop, fedavg(min_fit=0.5), tcp=DEFAULT,
+            chaos=ChaosSchedule(LAB),
+            config=ServerConfig(async_mode=True, state_plane="sparse"),
+        )
+
+
+def test_server_config_rejects_unknown_state_plane():
+    with pytest.raises(ValueError, match="state_plane"):
+        ServerConfig(state_plane="compact")
+
+
+# ---------------------------------------------------------------------------
+# memory regression: O(cohort), not O(population)  (satellite 3)
+# ---------------------------------------------------------------------------
+
+# Host-peak budget for a 100k-client run with cohort 32. The dense plane
+# alone would be ~100k rows x ~0.8 MB/row of f32 CNN state (~80 GB) and
+# eager partitioning ~20 GB of images — 512 MB is two-plus orders of
+# magnitude under either, while leaving generous room for jit compile
+# scratch and the ~0.8 MB O(n) transient of the selection draw itself.
+_MEM_BUDGET_BYTES = 512 * 1024 * 1024
+
+
+def _run_population_round_loop(n_clients, cohort, rounds=2):
+    pop = Population(
+        n_clients,
+        federated_mnist_factory(64, seed=9),
+        max_cached_shards=4 * cohort,
+    )
+    srv = FederatedServer(
+        TASK, pop, fedavg(min_fit=cohort / n_clients), tcp=DEFAULT,
+        chaos=ChaosSchedule(LAB),
+        config=ServerConfig(
+            rounds=rounds, local_steps=1, seed=0, batched=True,
+            clients_per_round=cohort / n_clients, state_plane="sparse",
+            eval_every=rounds,
+        ),
+        compressor=topk_compressor(0.05), eval_data=EVAL,
+    )
+    h = srv.run()
+    return h, srv, pop
+
+
+@pytest.mark.skipif(
+    os.environ.get("CI", "") != "",
+    reason="host-peak budget is noisy on shared CI runners; "
+    "population_bench enforces the same bound there",
+)
+def test_population_memory_o_cohort():
+    """Peak HOST bytes for a 100k-client population with cohort 32 stay
+    under a fixed budget, and the device-resident plane holds O(cohort)
+    rows — the dense equivalent would need ~5 orders of magnitude more
+    slots."""
+    tracemalloc.start()
+    try:
+        h, srv, pop = _run_population_round_loop(100_000, 32)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    assert h.completed_rounds == 2
+    assert all(r.delivered > 0 for r in h.rounds)
+    assert peak < _MEM_BUDGET_BYTES, f"host peak {peak/1e6:.1f} MB"
+    plane = srv._residual_plane
+    assert plane is not None and plane.storage == "sparse"
+    assert plane.occupancy <= 2 * 32  # <= rounds x cohort slots touched
+    assert plane.capacity <= 128  # pow2 ladder above the touched set
+    assert pop.materialized <= 2 * 32
+    assert pop.cached_shards <= 4 * 32

@@ -19,7 +19,7 @@ from repro.chaos import (
     partition,
     server_restart,
 )
-from repro.checkpoint.store import load_tree, save_tree
+from repro.checkpoint.store import CheckpointManager, load_tree, save_tree
 from repro.compress import randk_compressor, topk_compressor
 from repro.core import (
     EdgeClient,
@@ -166,6 +166,103 @@ def test_kill_and_resume_with_residual_plane(tmp_path):
                 stop_after_round=2)
     res = run_fl_grid(TASK, pts(), eval_data=EVAL, checkpoint_dir=d)
     _assert_histories_identical(ref.histories, res.histories)
+
+
+def test_kill_and_resume_sparse_plane_bitwise(tmp_path):
+    """Sparse-plane points persist their compacted residual rows plus the
+    manifest slot_maps entry; kill-and-resume stays bitwise identical to
+    the uninterrupted sparse run (which itself matches dense — see
+    tests/test_population_plane.py)."""
+    def pts():
+        return [
+            _point(rounds=4, comp=topk_compressor(0.1), state_plane="sparse"),
+            _point(rounds=4, comp=topk_compressor(0.1), state_plane="sparse",
+                   link=LAB.replace(delay=0.3)),
+        ]
+
+    ref = run_fl_grid(TASK, pts(), eval_data=EVAL)
+    d = str(tmp_path / "ckpt")
+    run_fl_grid(TASK, pts(), eval_data=EVAL, checkpoint_dir=d,
+                stop_after_round=2)
+    # the saved manifest carries a first-class slot-map entry per point
+    mgr = CheckpointManager(d)
+    maps = mgr.slot_maps(mgr.latest_step())
+    assert any(k.endswith("/residual") for k in maps), maps
+    for v in maps.values():
+        assert len(set(v)) == len(v)  # each saved row names a unique slot
+    res = run_fl_grid(TASK, pts(), eval_data=EVAL, checkpoint_dir=d)
+    _assert_histories_identical(ref.histories, res.histories)
+
+
+def test_kill_and_resume_cross_storage(tmp_path):
+    """A checkpoint written by SPARSE points restores into a DENSE run
+    (and bitwise-matches the uninterrupted dense reference): the
+    (slot, value) mapping, not the physical row layout, is the checkpoint
+    contract."""
+    def pts(plane):
+        return [_point(rounds=4, comp=topk_compressor(0.1),
+                       state_plane=plane)]
+
+    ref = run_fl_grid(TASK, pts("dense"), eval_data=EVAL)
+    d = str(tmp_path / "ckpt")
+    run_fl_grid(TASK, pts("sparse"), eval_data=EVAL, checkpoint_dir=d,
+                stop_after_round=2)
+    res = run_fl_grid(TASK, pts("dense"), eval_data=EVAL, checkpoint_dir=d)
+    _assert_histories_identical(ref.histories, res.histories)
+
+
+def test_dense_manifest_back_compat(tmp_path):
+    """A pre-sparse checkpoint — no ``slot_maps`` manifest entry, no
+    ``residual_plane``/``clients_sparse`` metadata keys — still resumes
+    bitwise: readers default every sparse-era field."""
+    import json
+    import os
+
+    def pts():
+        return [_point(rounds=4, comp=topk_compressor(0.1))]
+
+    ref = run_fl_grid(TASK, pts(), eval_data=EVAL)
+    d = str(tmp_path / "ckpt")
+    run_fl_grid(TASK, pts(), eval_data=EVAL, checkpoint_dir=d,
+                stop_after_round=2)
+    for step_dir in os.listdir(d):
+        if not step_dir.startswith("step_"):
+            continue
+        mf = os.path.join(d, step_dir, "manifest.json")
+        with open(mf) as f:
+            manifest = json.load(f)
+        manifest.pop("slot_maps", None)
+        for mp in manifest["metadata"]["points"]:
+            mp.pop("residual_plane", None)
+            mp.pop("clients_sparse", None)
+        with open(mf, "w") as f:
+            json.dump(manifest, f)
+    res = run_fl_grid(TASK, pts(), eval_data=EVAL, checkpoint_dir=d)
+    _assert_histories_identical(ref.histories, res.histories)
+
+
+def test_per_point_sparse_population_resume(tmp_path):
+    """A single sparse-plane server over a lazy Population checkpoints and
+    resumes bitwise through FederatedServer.run(checkpoint_dir=...) — the
+    per-point protocol persists only materialized client rows
+    (clients_sparse) plus the compacted residual rows."""
+    from repro.core import Population
+    from repro.data import shard_list_factory
+
+    def srv():
+        return FederatedServer(
+            TASK, Population(len(SHARDS), shard_list_factory(SHARDS)),
+            fedavg(min_fit=0.5), tcp=DEFAULT, chaos=ChaosSchedule(LAB),
+            config=ServerConfig(rounds=4, local_steps=2, seed=0,
+                                batched=True, state_plane="sparse"),
+            compressor=topk_compressor(0.1), eval_data=EVAL,
+        )
+
+    ref = srv().run()
+    d = str(tmp_path / "ckpt")
+    srv().run(checkpoint_dir=d, stop_after_round=2)
+    res = srv().run(checkpoint_dir=d)
+    _assert_histories_identical([ref], [res])
 
 
 def test_resume_refuses_mismatched_grid(tmp_path):
